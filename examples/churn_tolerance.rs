@@ -1,0 +1,127 @@
+//! Churn tolerance: compnodes leave mid-training; the broker detects the
+//! failure through missed heartbeats, promotes a replacement from the
+//! backup pool (paper §3.2) and the replacement resumes from the supernode
+//! parameter checkpoint (§3.5) — loss continuity is verified.
+//!
+//! Run: `cargo run --release --example churn_tolerance`
+
+use std::sync::Arc;
+
+use fusionai::broker::{Broker, NodeClass, NodeState};
+use fusionai::cluster::SimCluster;
+use fusionai::decompose::Decomposition;
+use fusionai::exec::{Adam, RefEngine};
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::net::{NetworkSim, Topology};
+use fusionai::perf::comm::LinkModel;
+use fusionai::perf::gpus::lookup;
+use fusionai::tensor::Tensor;
+use fusionai::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A 4-way pipeline of a tiny transformer on RefEngine + 2 backups.
+    let cfg = TransformerConfig::tiny();
+    let graph = cfg.build_graph();
+    let decomp = Decomposition::chain_balanced(&graph, 4);
+
+    let mut broker = Broker::new(3.0); // 3 s heartbeat timeout
+    for _ in 0..4 {
+        broker.register(lookup("RTX 3070").unwrap(), 0.5, NodeClass::Antnode, 0.0, false);
+    }
+    for _ in 0..2 {
+        broker.register(lookup("RTX 3080").unwrap(), 0.6, NodeClass::Supernode, 0.0, true);
+    }
+    println!("active {:?} | backup pool {:?}", broker.active_nodes(), broker.backup_pool());
+
+    let net = Arc::new(NetworkSim::new(
+        Topology::uniform(LinkModel::from_ms_mbps(20.0, 100.0)),
+        0.0,
+    ));
+    let mut cluster = SimCluster::new(
+        graph,
+        decomp,
+        net,
+        Box::new(|| Box::new(RefEngine::new())),
+        Box::new(|| Box::new(Adam::new(0.01))),
+        1,
+    )?;
+
+    let mut rng = Rng::new(99);
+    let feed = |cluster: &mut SimCluster, rng: &mut Rng| -> anyhow::Result<()> {
+        let tokens: Vec<i32> = (0..cfg.batch * cfg.seq)
+            .map(|i| ((i * 7 + 3) % cfg.vocab) as i32)
+            .collect();
+        let labels: Vec<i32> =
+            tokens.iter().map(|&t| ((t as usize + 7) % cfg.vocab) as i32).collect();
+        let _ = rng;
+        cluster.feed("tokens", Tensor::from_ivec(&[cfg.batch, cfg.seq], tokens))?;
+        cluster.feed("labels", Tensor::from_ivec(&[cfg.batch, cfg.seq], labels))?;
+        Ok(())
+    };
+
+    // Phase 1: healthy training.
+    let mut pre_crash_loss = f32::NAN;
+    for step in 0..15 {
+        feed(&mut cluster, &mut rng)?;
+        let r = cluster.train_step()?;
+        pre_crash_loss = r.loss.unwrap();
+        // All nodes — active and backup — heartbeat while healthy.
+        for n in 0..6 {
+            broker.heartbeat(n, step as f64)?;
+        }
+        if step % 5 == 0 {
+            println!("step {:>2}  loss {:.4}", step, pre_crash_loss);
+        }
+    }
+
+    // Phase 2: compnode 2 crashes (stops heartbeating and loses state).
+    println!("\n!! compnode 2 crashes at t=15");
+    cluster.fail_compnode(2);
+    // Everyone but node 2 keeps heartbeating; node 2 goes silent.
+    for t in 15..20 {
+        for n in (0..6).filter(|&n| n != 2) {
+            broker.heartbeat(n, t as f64)?;
+        }
+    }
+    let dead = broker.check_liveness(19.5);
+    println!("broker detected offline: {dead:?}");
+    assert_eq!(dead, vec![2]);
+
+    // A training step now fails — the pipeline is cut.
+    feed(&mut cluster, &mut rng)?;
+    let err = cluster.train_step().unwrap_err();
+    println!("training step failed as expected: {err}");
+
+    // Phase 3: promote a backup, restore from checkpoint, resume.
+    let replacement = broker.promote_backup(2).expect("backup pool non-empty");
+    println!(
+        "promoted backup node {replacement} ({})",
+        broker.info(replacement).unwrap().gpu.name
+    );
+    assert_eq!(broker.state(replacement), Some(NodeState::Active));
+    cluster.recover_compnode(2)?;
+
+    let mut post_loss = f32::NAN;
+    for step in 20..35 {
+        feed(&mut cluster, &mut rng)?;
+        let r = cluster.train_step()?;
+        post_loss = r.loss.unwrap();
+        if step % 5 == 0 {
+            println!("step {:>2}  loss {:.4}", step, post_loss);
+        }
+    }
+
+    println!(
+        "\npre-crash loss {pre_crash_loss:.4} | post-recovery loss {post_loss:.4}"
+    );
+    assert!(
+        post_loss < pre_crash_loss * 1.15,
+        "recovery must resume near the checkpoint, not restart"
+    );
+    println!("event log:");
+    for e in &broker.events {
+        println!("  {e:?}");
+    }
+    println!("churn_tolerance OK");
+    Ok(())
+}

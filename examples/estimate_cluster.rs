@@ -1,0 +1,146 @@
+//! The paper's "what-if" tool: describe a GPU fleet + network in TOML and
+//! get the §4 analytic estimate (Eq. 3 latency, Eq. 4 pipelined
+//! throughput) against a 4×H100 datacenter baseline — the headline
+//! comparison of the paper, interactive.
+//!
+//! Run: `cargo run --release --example estimate_cluster [fleet.toml]`
+//! Without an argument it runs the paper's own configuration (50× RTX 3080
+//! on Bert-Large, n_b = 512) across a bandwidth sweep.
+
+use fusionai::benchutil::Table;
+use fusionai::config::ExperimentConfig;
+use fusionai::decompose::Decomposition;
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::perf::comm::LinkModel;
+use fusionai::perf::gpus::lookup;
+use fusionai::perf::paleo::{DeviceProfile, PaleoModel};
+use fusionai::pipeline::analytics::PipelineEstimate;
+use fusionai::util::human_secs;
+
+const PAPER_CONFIG: &str = r#"
+# The paper's headline setup (§4, Figures 4–5).
+[job]
+model = "bert-large"
+batches = 512
+training = false
+
+[network]
+bandwidth_mbps = 1000.0
+latency_ms = 5.0
+
+[[fleet]]
+gpu = "RTX 3080"
+count = 50
+lambda = 0.5
+"#;
+
+fn estimate_for(cfg: &ExperimentConfig, link: LinkModel) -> PipelineEstimate {
+    let g = cfg.model.build_graph();
+    let n = cfg.total_devices();
+    let d = Decomposition::chain_balanced(&g, n);
+    let mut models = Vec::new();
+    for f in &cfg.fleet {
+        for _ in 0..f.count {
+            models.push(PaleoModel::new(DeviceProfile::with_lambda(&f.gpu, f.lambda)));
+        }
+    }
+    PipelineEstimate::from_decomposition(&g, &d, &models, link, cfg.training)
+}
+
+fn h100_baseline(model: &TransformerConfig, training: bool) -> PipelineEstimate {
+    let g = model.build_graph();
+    let d = Decomposition::chain_balanced(&g, 4);
+    let models: Vec<PaleoModel> = (0..4)
+        .map(|_| PaleoModel::new(DeviceProfile::with_lambda(lookup("H100").unwrap(), 0.5)))
+        .collect();
+    PipelineEstimate::from_decomposition(&g, &d, &models, LinkModel::datacenter(), training)
+}
+
+fn main() -> anyhow::Result<()> {
+    let toml_src = match std::env::args().nth(1) {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => PAPER_CONFIG.to_string(),
+    };
+    let cfg = ExperimentConfig::from_toml(&toml_src)?;
+    let n_b = cfg.batches;
+    println!(
+        "fleet: {} ({} devices) | model {} | n_b = {n_b}\n",
+        cfg.fleet
+            .iter()
+            .map(|f| format!("{}×{}", f.count, f.gpu.name))
+            .collect::<Vec<_>>()
+            .join(" + "),
+        cfg.total_devices(),
+        cfg.model.name
+    );
+
+    let baseline = h100_baseline(&cfg.model, cfg.training);
+    println!(
+        "baseline 4×H100 (NVLink-class): latency {}, steady throughput {:.2} batches/s\n",
+        human_secs(baseline.latency()),
+        baseline.steady_state_throughput()
+    );
+
+    // Sweep the Figure-5 axes: bandwidth AND latency.
+    let mut table = Table::new(&[
+        "link (α, bw)", "latency(Eq.3)", "T_512(Eq.4)", "throughput", "vs 4×H100", "regime",
+    ]);
+    for (alpha_ms, mbps) in [
+        (50.0, 10.0),        // poor consumer WAN
+        (20.0, 100.0),       // typical broadband
+        (5.0, 1_000.0),      // fiber
+        (1.0, 10_000.0),     // metro 10GbE
+        (0.1, 100_000.0),    // co-located 100GbE
+        (0.005, 400_000.0),  // datacenter-class
+    ] {
+        let link = LinkModel::from_ms_mbps(alpha_ms, mbps);
+        let est = estimate_for(&cfg, link);
+        let ratio = est.steady_state_throughput() / baseline.steady_state_throughput();
+        table.row(&[
+            format!("{alpha_ms} ms, {mbps:.0} Mbps"),
+            human_secs(est.latency()),
+            human_secs(est.pipelined_time(n_b)),
+            format!("{:.3} b/s", est.throughput(n_b)),
+            format!("{:.2}×", ratio),
+            if est.comm_bound() { "comm-bound" } else { "compute-bound" }.to_string(),
+        ]);
+    }
+    table.print();
+
+    let at_cfg = estimate_for(&cfg, cfg.link);
+    println!(
+        "\nat the configured link ({:.0} ms, {:.0} Mbps): latency {}, {} for {n_b} batches, bubble {:.1}%",
+        cfg.link.alpha * 1e3,
+        cfg.link.bandwidth() * 8.0 / 1e6,
+        human_secs(at_cfg.latency()),
+        human_secs(at_cfg.pipelined_time(n_b)),
+        at_cfg.bubble_fraction(n_b) * 100.0
+    );
+    println!(
+        "cost: fleet ≈ ${:.0} vs 4×H100 ≈ ${:.0}",
+        cfg.fleet.iter().map(|f| f.count as f64 * f.gpu.price_usd).sum::<f64>(),
+        4.0 * lookup("H100").unwrap().price_usd
+    );
+
+    // Energy & carbon (paper §2.8) for the n_b-batch run at the configured link.
+    use fusionai::perf::energy::{carbon_kg, pipeline_energy, tdp_watts};
+    let mut tdps = Vec::new();
+    for f in &cfg.fleet {
+        for _ in 0..f.count {
+            tdps.push(tdp_watts(f.gpu.name));
+        }
+    }
+    let fleet_e = pipeline_energy(&at_cfg, &tdps, n_b);
+    let base_e = pipeline_energy(&baseline, &vec![tdp_watts("H100"); 4], n_b);
+    println!(
+        "energy for {n_b} batches: fleet {:.3} kWh (duty {:.0}%) vs 4×H100 {:.4} kWh (duty {:.0}%); \
+         ≈{:.2} vs {:.3} kg CO₂e @0.4 kg/kWh",
+        fleet_e.kwh,
+        fleet_e.duty_cycle * 100.0,
+        base_e.kwh,
+        base_e.duty_cycle * 100.0,
+        carbon_kg(fleet_e.kwh, 0.4),
+        carbon_kg(base_e.kwh, 0.4),
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! §Perf tool: per-artifact wall-clock breakdown of one preset's stage
+//! functions (fwd / bwd / update) through the cached-buffer hot path.
+//! This is how the EXPERIMENTS.md §Perf iteration log was produced.
+//!
+//! Run: `cargo run --release --example prof_stage [preset]`
+
+use std::time::Instant;
+
+use fusionai::exec::xla_engine::XlaEngine;
+use fusionai::tensor::Tensor;
+use fusionai::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::args().nth(1).unwrap_or_else(|| "gpt-small".into());
+    let dir_s = format!("artifacts/{preset}");
+    let dir = std::path::Path::new(&dir_s);
+    let probe = XlaEngine::load_stage(dir, "embed")?;
+    let stages = probe.manifest().stages.clone();
+    println!(
+        "preset {preset}: {} stages (times are 5-run means, first run includes warmup)",
+        stages.len()
+    );
+    for stage in &stages {
+        let eng = XlaEngine::load_stage(dir, stage)?;
+        let mut rng = Rng::new(1);
+        let mut st = eng.new_stage_state(stage, &mut rng)?;
+        let m = eng.manifest();
+        let (b, s, d) = (
+            m.config_usize("batch").unwrap(),
+            m.config_usize("seq").unwrap(),
+            m.config_usize("dim").unwrap(),
+        );
+        let vocab = m.config_usize("vocab").unwrap();
+        let x = Tensor::randn(&[b, s, d], 1.0, &mut rng);
+        let tokens =
+            Tensor::from_ivec(&[b, s], (0..b * s).map(|i| (i % vocab) as i32).collect());
+        let labels = tokens.clone();
+        let fwd_in: Vec<&Tensor> = match stage.as_str() {
+            "embed" => vec![&tokens],
+            "head" => vec![&x, &labels],
+            _ => vec![&x],
+        };
+        if stage != "head" {
+            let t0 = Instant::now();
+            for _ in 0..5 {
+                eng.forward_cached(&st, &fwd_in)?;
+            }
+            println!("  {stage}_fwd    {:8.1} ms", t0.elapsed().as_secs_f64() / 5.0 * 1e3);
+        }
+        let dy = Tensor::randn(&[b, s, d], 0.01, &mut rng);
+        let grad = if stage == "head" { None } else { Some(&dy) };
+        let t0 = Instant::now();
+        let mut dparams = None;
+        for _ in 0..5 {
+            let (_, dp, _) = eng.backward_cached(&st, &fwd_in, grad)?;
+            dparams = Some(dp);
+        }
+        println!("  {stage}_bwd    {:8.1} ms", t0.elapsed().as_secs_f64() / 5.0 * 1e3);
+        let dp = dparams.unwrap();
+        let t0 = Instant::now();
+        for i in 0..5 {
+            eng.update_cached(&mut st, &dp, i + 1)?;
+        }
+        println!("  {stage}_update {:8.1} ms", t0.elapsed().as_secs_f64() / 5.0 * 1e3);
+    }
+    Ok(())
+}

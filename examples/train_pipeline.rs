@@ -1,0 +1,101 @@
+//! End-to-end driver (DESIGN.md deliverable): pipeline-parallel training of
+//! a GPT model across simulated decentralized compnodes with **real XLA
+//! compute** on the request path.
+//!
+//! Every piece of the stack is exercised:
+//!   L1 Pallas kernels → L2 jax stage functions → AOT HLO artifacts →
+//!   rust PJRT runtime → per-compnode threads → GPipe microbatching →
+//!   α-β WAN accounting → DHT data provider → Adam updates → loss curve.
+//!
+//! Presets: `--preset gpt-small` (~12M params, CI-speed) or
+//! `--preset gpt-e2e` (~110M params, the paper-scale run recorded in
+//! EXPERIMENTS.md). Build artifacts first: `make artifacts`.
+//!
+//! Run: `cargo run --release --example train_pipeline -- --preset gpt-small --steps 100`
+
+use std::collections::HashMap;
+
+use fusionai::cluster::{PipelineTrainer, TrainConfig};
+use fusionai::compress::Codec;
+use fusionai::perf::comm::LinkModel;
+use fusionai::util::{human_bytes, human_secs};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut flags: HashMap<String, String> = HashMap::new();
+    let mut i = 0;
+    while i + 1 < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            flags.insert(k.to_string(), args[i + 1].clone());
+        }
+        i += 2;
+    }
+    let preset = flags.get("preset").map(String::as_str).unwrap_or("gpt-small");
+    let steps: usize = flags.get("steps").map(|s| s.parse().unwrap()).unwrap_or(100);
+    let microbatches: usize =
+        flags.get("microbatches").map(|s| s.parse().unwrap()).unwrap_or(2);
+    let codec = match flags.get("codec").map(String::as_str) {
+        Some("int8") => Some(Codec::Int8),
+        Some("topk") => Some(Codec::TopK { ratio: 0.1 }),
+        _ => None,
+    };
+
+    let mut cfg = TrainConfig::new(format!("artifacts/{preset}"));
+    cfg.steps = steps;
+    cfg.microbatches = microbatches;
+    cfg.codec = codec;
+    cfg.link = LinkModel::from_ms_mbps(5.0, 1000.0);
+    let trainer = PipelineTrainer::new(cfg)?;
+    let stages = trainer.manifest.stages.len();
+    let params: usize = trainer
+        .manifest
+        .stage_params
+        .values()
+        .flat_map(|v| v.iter().map(|p| p.shape.iter().product::<usize>()))
+        .sum();
+    println!(
+        "== train_pipeline: preset {preset} | {:.1}M params | {stages} stages | {steps} steps × {microbatches} microbatches | codec {:?}",
+        params as f64 / 1e6,
+        codec,
+    );
+
+    let report = trainer.run()?;
+
+    println!("\nloss curve (every ~{} steps):", (steps / 20).max(1));
+    let stride = (report.losses.len() / 20).max(1);
+    for (i, (step, loss)) in report
+        .losses
+        .to_csv()
+        .lines()
+        .skip(1)
+        .enumerate()
+        .filter_map(|(i, l)| {
+            let mut it = l.split(',');
+            Some((i, (it.next()?.parse::<usize>().ok()?, it.next()?.parse::<f32>().ok()?)))
+        })
+        .filter(|(i, _)| i % stride == 0 || *i + 1 == steps)
+        .map(|(i, p)| (i, p))
+    {
+        let _ = i;
+        println!("  step {:>4}  loss {:.4}", step, loss);
+    }
+    let (s0, l0) = report.losses.first().unwrap();
+    let (s1, l1) = report.losses.last().unwrap();
+    println!("\nloss {l0:.4} @step {s0} → {l1:.4} @step {s1} (tail-5 mean {:.4})", report.losses.tail_mean(5));
+    println!(
+        "wall {:.1}s | {:.0} tokens/s | comm {} | modelled WAN time {}",
+        report.wall_seconds,
+        report.tokens_per_second,
+        human_bytes(report.comm_bytes),
+        human_secs(report.comm_model_seconds)
+    );
+
+    // Persist the loss curve for EXPERIMENTS.md.
+    let out = format!("train_{preset}_loss.csv");
+    report.losses.save_csv(std::path::Path::new(&out))?;
+    println!("loss curve written to {out}");
+
+    anyhow::ensure!(l1 < l0, "training must reduce the loss ({l0} → {l1})");
+    println!("train_pipeline OK");
+    Ok(())
+}

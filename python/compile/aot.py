@@ -1,0 +1,160 @@
+"""AOT export: lower every pipeline-stage function to HLO **text** and write
+the artifact manifest the rust runtime consumes.
+
+HLO text — NOT ``lowered.serialize()`` / serialized HloModuleProto — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts per preset (calling conventions in rust/src/exec/xla_engine.rs):
+
+  {stage}_fwd / {stage}_bwd / {stage}_update   for every stage
+  head_logits                                  (serving path)
+  act_quant_roundtrip                          (L1 quantize kernel demo)
+
+Usage:
+  python -m compile.aot --preset gpt-tiny --out ../artifacts
+  python -m compile.aot --preset gpt-e2e  --out ../artifacts
+  python -m compile.aot --preset gpt-tiny --use-pallas --suffix -pallas ...
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import quantize
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation (return_tuple=True) → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg, stage):
+    return [spec(shape) for _, shape, _, _ in model.stage_param_specs(cfg, stage)]
+
+
+def n_outputs_of(fn, *args):
+    out = jax.eval_shape(fn, *args)
+    return len(out) if isinstance(out, (tuple, list)) else 1
+
+
+def export(cfg: model.ModelConfig, out_dir: str, preset_dir_name: str) -> str:
+    dest = os.path.join(out_dir, preset_dir_name)
+    os.makedirs(dest, exist_ok=True)
+    artifacts = {}
+
+    def lower(name, fn, *args):
+        # keep_unused: the rust side feeds arguments positionally, so the
+        # lowered program's parameter list must match even when jax could
+        # prune an argument (e.g. a bias whose value no gradient depends on).
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(dest, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": fname, "n_outputs": n_outputs_of(fn, *args)}
+        print(f"  {name:<24} {len(text):>10} chars  ({artifacts[name]['n_outputs']} outputs)")
+
+    tok = spec((cfg.batch, cfg.seq), jnp.int32)
+    act = spec((cfg.batch, cfg.seq, cfg.dim))
+    step = spec((), jnp.int32)
+
+    for stage in cfg.stages:
+        ps = param_specs(cfg, stage)
+        if stage == "embed":
+            lower(f"{stage}_fwd",
+                  lambda *a: model.embed_fwd(cfg, a[:len(ps)], a[len(ps)]),
+                  *ps, tok)
+            lower(f"{stage}_bwd",
+                  lambda *a: model.embed_bwd(cfg, a[:len(ps)], a[len(ps)], a[len(ps) + 1]),
+                  *ps, tok, act)
+        elif stage == "head":
+            lower(f"{stage}_fwd",
+                  lambda *a: model.head_loss(cfg, a[:len(ps)], a[len(ps)], a[len(ps) + 1]),
+                  *ps, act, tok)
+            lower(f"{stage}_bwd",
+                  lambda *a: model.head_bwd(cfg, a[:len(ps)], a[len(ps)], a[len(ps) + 1]),
+                  *ps, act, tok)
+            lower("head_logits",
+                  lambda *a: model.head_logits(cfg, a[:len(ps)], a[len(ps)]),
+                  *ps, act)
+        else:
+            lower(f"{stage}_fwd",
+                  lambda *a: model.block_fwd(cfg, a[:len(ps)], a[len(ps)]),
+                  *ps, act)
+            lower(f"{stage}_bwd",
+                  lambda *a: model.block_bwd(cfg, a[:len(ps)], a[len(ps)], a[len(ps) + 1]),
+                  *ps, act, act)
+        # Adam update: params…, grads…, m…, v…, step → params…, m…, v…
+        n = len(ps)
+        lower(f"{stage}_update",
+              lambda *a, n=n: model.adam_update(
+                  cfg, a[:n], a[n:2 * n], a[2 * n:3 * n], a[3 * n:4 * n], a[4 * n]),
+              *ps, *ps, *ps, *ps, step)
+
+    # L1 quantize-kernel artifact: f32 [B·S, D] → int8 roundtrip.
+    rows = cfg.batch * cfg.seq
+    lower("act_quant_roundtrip",
+          lambda x: quantize.roundtrip(x),
+          spec((rows, cfg.dim)))
+
+    manifest = {
+        "preset": preset_dir_name,
+        "config": {
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "layers": cfg.layers,
+            "dim": cfg.dim,
+            "heads": cfg.heads,
+            "ffn_hidden": cfg.ffn_hidden,
+            "block_stages": cfg.block_stages,
+            "lr": cfg.lr,
+            "use_pallas": int(cfg.use_pallas),
+        },
+        "stages": cfg.stages,
+        "artifacts": artifacts,
+        "stage_params": {
+            stage: [
+                {"name": name, "shape": list(shape), "init": init,
+                 **({"std": std} if init == "normal" else {})}
+                for name, shape, init, std in model.stage_param_specs(cfg, stage)
+            ]
+            for stage in cfg.stages
+        },
+    }
+    with open(os.path.join(dest, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {dest}/manifest.json ({len(artifacts)} artifacts)")
+    return dest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="gpt-tiny")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route attention through the L1 Pallas kernel")
+    ap.add_argument("--suffix", default="",
+                    help="artifact dir name suffix (e.g. -pallas)")
+    args = ap.parse_args()
+    cfg = model.preset(args.preset, use_pallas=args.use_pallas)
+    export(cfg, args.out, args.preset + args.suffix)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: tiled flash-attention-style multi-head attention.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's substrate
+is CUDA consumer GPUs, where FlashAttention stages K/V tiles through
+threadblock shared memory. On the TPU-flavoured Pallas model the same
+insight maps to **VMEM tiling**: the grid iterates (batch·heads, q-blocks),
+each program holds one `[BLOCK_Q, Dh]` query tile resident in VMEM and
+streams `[BLOCK_K, Dh]` key/value tiles from HBM, maintaining the online
+softmax running max/denominator so the full `S×S` score matrix never
+materializes. Matmuls are shaped for the MXU (tile sizes multiples of 8).
+
+The kernel MUST be lowered with ``interpret=True`` on this image: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Numerics are validated against ``ref.attention_ref`` by hypothesis-driven
+pytest sweeps over shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM tile sizes. BLOCK_Q × Dh and BLOCK_K × Dh tiles must fit comfortably
+# in ~16 MiB VMEM alongside accumulators; these defaults keep the footprint
+# under 256 KiB for Dh ≤ 128 (see DESIGN.md §Perf for the roofline math).
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
+                 q_block: int, seq: int):
+    """One grid program: one query tile vs all key/value tiles."""
+    qi = pl.program_id(1)  # query-block index
+    q = q_ref[...]  # [block_q, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+
+    block_q = q.shape[0]
+    q_start = qi * q_block
+
+    # Online softmax state.
+    m = jnp.full((block_q, 1), -jnp.inf, dtype=jnp.float32)  # running max
+    l = jnp.zeros((block_q, 1), dtype=jnp.float32)           # running denom
+    acc = jnp.zeros((block_q, dh), dtype=jnp.float32)        # weighted V sum
+
+    num_k_blocks = seq // block_k
+
+    def body(ki, state):
+        m, l, acc = state
+        k_start = ki * block_k
+        k = pl.load(k_ref, (pl.dslice(k_start, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(k_start, block_k), slice(None)))
+        scores = jnp.dot(q, k.T) * scale  # [block_q, block_k] on the MXU
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+            scores = jnp.where(q_pos >= k_pos, scores, -jnp.inf)
+        m_new = jnp.maximum(m, scores.max(axis=-1, keepdims=True))
+        # Guard fully-masked rows (m_new = -inf): contribute nothing.
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(jnp.isfinite(scores), scores - m_safe, -jnp.inf))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+        acc_new = alpha * acc + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention_pallas(q, k, v, causal: bool = True,
+                     block_q: int = DEFAULT_BLOCK_Q,
+                     block_k: int = DEFAULT_BLOCK_K):
+    """Tiled attention over [B, H, S, Dh] via a Pallas kernel.
+
+    Shapes: S must be divisible by both block sizes (callers pick blocks
+    accordingly; the AOT path always uses compatible shapes).
+    """
+    b, h, s, dh = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+
+    # Collapse (B, H) into the grid's first axis.
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+
+    grid = (b * h, s // bq)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=bk, causal=causal,
+                          q_block=bq, seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda g, qi: (g, qi, 0)),
+            pl.BlockSpec((None, s, dh), lambda g, qi: (g, 0, 0)),
+            pl.BlockSpec((None, s, dh), lambda g, qi: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda g, qi: (g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: jax cannot trace a VJP *through* an interpret-mode
+# pallas_call (pallas calls cannot nest inside the interpreter's traces), so
+# the backward pass is defined explicitly as the VJP of the mathematically
+# identical reference. Forward = the tiled kernel; backward = exact formula.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal: bool = True):
+    """Differentiable tiled attention (kernel fwd, analytic bwd)."""
+    return attention_pallas(q, k, v, causal=causal)
+
+
+def _attention_fwd(q, k, v, causal):
+    return attention_pallas(q, k, v, causal=causal), (q, k, v)
+
+
+def _attention_bwd(causal, res, g):
+    from compile.kernels.ref import attention_ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal=causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def vmem_bytes_estimate(block_q: int, block_k: int, dh: int) -> int:
+    """Estimated VMEM working set of one program (f32): Q tile + K/V tiles +
+    softmax state + accumulator + score tile. Used by the §Perf notes."""
+    return 4 * (
+        block_q * dh        # q
+        + 2 * block_k * dh  # k, v tiles
+        + block_q * block_k # scores
+        + block_q * (2 + dh)  # m, l, acc
+    )

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: symmetric per-row int8 quantization.
+
+The communication hot-spot of the decentralized system (paper §2.3): before
+an activation/gradient tensor leaves a compnode it is quantized to int8
+(4× smaller on the wire). The kernel processes one row block per grid
+program — rows are independent, so the grid parallelizes trivially and the
+per-program VMEM footprint is one `[BLOCK_R, C]` tile plus the scale
+column.
+
+``interpret=True`` as everywhere (CPU PJRT). Oracle: ``ref.quantize_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 8
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0.0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def quantize_pallas(x, block_r: int = DEFAULT_BLOCK_R):
+    """Quantize [R, C] float32 → (int8 [R, C], scales [R, 1])."""
+    r, c = x.shape
+    br = min(block_r, r)
+    assert r % br == 0, (r, br)
+    grid = (r // br,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int8),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def dequantize_pallas(q, scale, block_r: int = DEFAULT_BLOCK_R):
+    """Inverse kernel: (int8 [R, C], [R, 1]) → float32 [R, C]."""
+    r, c = q.shape
+    br = min(block_r, r)
+    assert r % br == 0, (r, br)
+    grid = (r // br,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(q, scale)
+
+
+def roundtrip(x, block_r: int = DEFAULT_BLOCK_R):
+    """f32 → int8 → f32 (what the AOT `act_quant_roundtrip` artifact runs)."""
+    q, s = quantize_pallas(x, block_r=block_r)
+    return dequantize_pallas(q, s, block_r=block_r)

@@ -1,0 +1,50 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel must match its
+reference here to tight tolerances across a hypothesis-swept shape/dtype
+grid (see python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Multi-head scaled-dot-product attention.
+
+    Args:
+      q, k, v: [B, H, S, Dh]
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      [B, H, S, Dh] context.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def quantize_ref(x):
+    """Symmetric per-row int8 quantization.
+
+    Args:
+      x: [R, C] float32.
+
+    Returns:
+      (q int8 [R, C], scale float32 [R, 1]) with q = round(x / scale).
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0.0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scale):
+    """Inverse of quantize_ref (lossy)."""
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,258 @@
+"""L2: the transformer pipeline-stage compute in JAX.
+
+Build-time only — never imported at runtime. Each pipeline stage is a pure
+function over a FLAT parameter list (ordering fixed here and mirrored in
+the artifact manifest so the rust coordinator can initialize/feed params
+positionally):
+
+  embed:    [wte (V,D), wpe (S,D)]
+  block{i}: per layer [ln1_g, ln1_b, wqkv (D,3D), bqkv (3D), wo (D,D),
+            bo (D), ln2_g, ln2_b, w1 (D,F), b1 (F), w2 (F,D), b2 (D)]
+  head:     [lnf_g, lnf_b, w_head (D,V), b_head (V)]
+
+Backward stage functions REMATERIALIZE the forward internally (jax.vjp over
+the stage function), so a compnode stashes only stage inputs per microbatch
+— the memory/compute trade the paper cites for low-memory devices (§2.4).
+
+Attention runs either through the L1 Pallas kernel
+(`kernels.attention.attention_pallas`, interpret mode) or the pure-jnp
+reference — both lower into the same HLO artifact shape; `aot.py` picks via
+--use-pallas.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import attention as attention_pallas_ad
+from compile.kernels.ref import attention_ref
+
+PARAMS_PER_LAYER = 12
+EMBED_PARAMS = 2
+HEAD_PARAMS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Mirror of the rust `TransformerConfig` presets."""
+
+    name: str
+    vocab: int
+    seq: int
+    batch: int
+    layers: int
+    dim: int
+    heads: int
+    ffn_hidden: int
+    block_stages: int  # transformer blocks are split into this many stages
+    lr: float = 1e-3
+    use_pallas: bool = False
+
+    @property
+    def layers_per_stage(self) -> int:
+        assert self.layers % self.block_stages == 0
+        return self.layers // self.block_stages
+
+    @property
+    def stages(self) -> List[str]:
+        return ["embed"] + [f"block{i}" for i in range(self.block_stages)] + ["head"]
+
+
+def preset(name: str, use_pallas: bool = False) -> ModelConfig:
+    """Named presets matching rust `models::transformer`."""
+    if name == "gpt-tiny":
+        return ModelConfig(name=name, vocab=256, seq=16, batch=2, layers=2,
+                           dim=32, heads=2, ffn_hidden=64, block_stages=2,
+                           lr=1e-2, use_pallas=use_pallas)
+    if name == "gpt-small":
+        # ~12M params — CI-speed e2e config.
+        return ModelConfig(name=name, vocab=4096, seq=64, batch=4, layers=4,
+                           dim=256, heads=4, ffn_hidden=1024, block_stages=2,
+                           lr=2e-3, use_pallas=use_pallas)
+    if name == "gpt-e2e":
+        # ~110M params — the paper-scale end-to-end driver.
+        return ModelConfig(name=name, vocab=16384, seq=128, batch=8, layers=12,
+                           dim=768, heads=12, ffn_hidden=3072, block_stages=3,
+                           lr=1e-3, use_pallas=use_pallas)
+    raise ValueError(f"unknown preset '{name}'")
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (shapes + init) — the manifest source of truth
+# ---------------------------------------------------------------------------
+
+def stage_param_specs(cfg: ModelConfig, stage: str):
+    """[(name, shape, init, std)] for one stage, in flat order."""
+    d, f = cfg.dim, cfg.ffn_hidden
+    if stage == "embed":
+        return [
+            ("wte", (cfg.vocab, d), "normal", 0.02),
+            ("wpe", (cfg.seq, d), "normal", 0.01),
+        ]
+    if stage == "head":
+        return [
+            ("lnf_g", (d,), "ones", 0.0),
+            ("lnf_b", (d,), "zeros", 0.0),
+            ("w_head", (d, cfg.vocab), "normal", d ** -0.5),
+            ("b_head", (cfg.vocab,), "zeros", 0.0),
+        ]
+    assert stage.startswith("block"), stage
+    specs = []
+    for l in range(cfg.layers_per_stage):
+        specs += [
+            (f"l{l}.ln1_g", (d,), "ones", 0.0),
+            (f"l{l}.ln1_b", (d,), "zeros", 0.0),
+            (f"l{l}.wqkv", (d, 3 * d), "normal", d ** -0.5),
+            (f"l{l}.bqkv", (3 * d,), "zeros", 0.0),
+            (f"l{l}.wo", (d, d), "normal", (d ** -0.5) / (2 * cfg.layers) ** 0.5),
+            (f"l{l}.bo", (d,), "zeros", 0.0),
+            (f"l{l}.ln2_g", (d,), "ones", 0.0),
+            (f"l{l}.ln2_b", (d,), "zeros", 0.0),
+            (f"l{l}.w1", (d, f), "normal", d ** -0.5),
+            (f"l{l}.b1", (f,), "zeros", 0.0),
+            (f"l{l}.w2", (f, d), "normal", (f ** -0.5) / (2 * cfg.layers) ** 0.5),
+            (f"l{l}.b2", (d,), "zeros", 0.0),
+        ]
+    return specs
+
+
+def init_stage_params(cfg: ModelConfig, stage: str, key):
+    """Materialize initial parameters (used by tests; rust re-derives from
+    the manifest with its own RNG)."""
+    params = []
+    for name, shape, init, std in stage_param_specs(cfg, stage):
+        key, sub = jax.random.split(key)
+        if init == "zeros":
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif init == "ones":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stage forward functions
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + eps) + b
+
+
+def _attention(cfg: ModelConfig, x, wqkv, bqkv, wo, bo):
+    b, s, d = x.shape
+    h = cfg.heads
+    dh = d // h
+    qkv = x @ wqkv + bqkv  # [B, S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    # [B, S, D] → [B, H, S, Dh]
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    attn = attention_pallas_ad if cfg.use_pallas else attention_ref
+    ctx = attn(q, k, v, causal=True)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ wo + bo
+
+
+def _block_layer(cfg: ModelConfig, x, p):
+    """One pre-LN transformer layer; p = the 12-tuple for this layer."""
+    (ln1_g, ln1_b, wqkv, bqkv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2) = p
+    x = x + _attention(cfg, _layernorm(x, ln1_g, ln1_b), wqkv, bqkv, wo, bo)
+    h = _layernorm(x, ln2_g, ln2_b) @ w1 + b1
+    h = jax.nn.gelu(h)
+    return x + h @ w2 + b2
+
+
+def embed_fwd(cfg: ModelConfig, params, tokens):
+    """tokens [B, S] i32 → h [B, S, D]."""
+    wte, wpe = params
+    return wte[tokens] + wpe[None, :, :]
+
+
+def block_fwd(cfg: ModelConfig, params, h):
+    """h [B, S, D] → h [B, S, D] through layers_per_stage layers."""
+    for l in range(cfg.layers_per_stage):
+        layer = tuple(params[l * PARAMS_PER_LAYER:(l + 1) * PARAMS_PER_LAYER])
+        h = _block_layer(cfg, h, layer)
+    return h
+
+
+def head_logits(cfg: ModelConfig, params, h):
+    """h [B, S, D] → logits [B, S, V]."""
+    lnf_g, lnf_b, w_head, b_head = params
+    return _layernorm(h, lnf_g, lnf_b) @ w_head + b_head
+
+
+def head_loss(cfg: ModelConfig, params, h, labels):
+    """Mean next-token cross entropy (labels already shifted upstream)."""
+    logits = head_logits(cfg, params, h)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# stage backward functions (remat: vjp over the forward)
+# ---------------------------------------------------------------------------
+
+def embed_bwd(cfg: ModelConfig, params, tokens, dh):
+    """→ dparams (tokens carry no gradient)."""
+    _, vjp = jax.vjp(lambda p: embed_fwd(cfg, p, tokens), list(params))
+    (dparams,) = vjp(dh)
+    return tuple(dparams)
+
+
+def block_bwd(cfg: ModelConfig, params, h, dy):
+    """→ (dh, *dparams)."""
+    _, vjp = jax.vjp(lambda p, x: block_fwd(cfg, p, x), list(params), h)
+    dparams, dh = vjp(dy)
+    return (dh, *dparams)
+
+
+def head_bwd(cfg: ModelConfig, params, h, labels):
+    """→ (dh, *dparams, loss). Seeds dL/dL = 1 internally."""
+    loss, vjp = jax.vjp(lambda p, x: head_loss(cfg, p, x, labels), list(params), h)
+    dparams, dh = vjp(jnp.ones((), jnp.float32))
+    return (dh, *dparams, loss)
+
+
+# ---------------------------------------------------------------------------
+# optimizer (mirrors rust exec::optim::Adam)
+# ---------------------------------------------------------------------------
+
+def adam_update(cfg: ModelConfig, params, grads, m, v, step,
+                beta1=0.9, beta2=0.999, eps=1e-8):
+    """One Adam step over a flat param list. `step` is 1-based i32.
+
+    Returns (params…, m…, v…) flattened in that order.
+    """
+    step_f = step.astype(jnp.float32)
+    b1t = 1.0 - beta1 ** step_f
+    b2t = 1.0 - beta2 ** step_f
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = beta1 * mi + (1.0 - beta1) * g
+        vi = beta2 * vi + (1.0 - beta2) * g * g
+        mhat = mi / b1t
+        vhat = vi / b2t
+        new_p.append(p - cfg.lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_p, *new_m, *new_v)
+
+
+# ---------------------------------------------------------------------------
+# full-model reference (for pytest only — the runtime never sees this)
+# ---------------------------------------------------------------------------
+
+def full_forward_loss(cfg: ModelConfig, stage_params, tokens, labels):
+    """Chain every stage: the oracle for stage-composition tests."""
+    h = embed_fwd(cfg, stage_params["embed"], tokens)
+    for i in range(cfg.block_stages):
+        h = block_fwd(cfg, stage_params[f"block{i}"], h)
+    return head_loss(cfg, stage_params["head"], h, labels)

@@ -1,0 +1,174 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Scheduler** (Eq. 2): LPT+refine vs plain LPT vs round-robin vs
+//!    random, on a heterogeneous fleet — the "heterogeneity-aware
+//!    scheduling matters" claim of §2.2/§3.8.
+//! 2. **Compression** (§2.3): wire bytes + error for none/int8/top-k, and
+//!    the comm-bound throughput each buys.
+//! 3. **Fault tolerance** (§3.2): backup-pool takeover + checkpoint restore
+//!    vs cold restart — steps of progress lost.
+//! 4. **Local-SGD** (§2.3): parameter-sync traffic vs sync period.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use std::sync::Arc;
+
+use fusionai::benchutil::Table;
+use fusionai::cluster::SimCluster;
+use fusionai::compress::{Codec, LocalSgdPolicy};
+use fusionai::decompose::Decomposition;
+use fusionai::exec::{Adam, RefEngine};
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::net::{NetworkSim, Topology};
+use fusionai::perf::comm::LinkModel;
+use fusionai::perf::gpus::lookup;
+use fusionai::sched::{self, PeerSpec, TaskSpec};
+use fusionai::tensor::Tensor;
+use fusionai::util::{human_bytes, human_secs, Rng};
+
+fn main() {
+    scheduler_ablation();
+    compression_ablation();
+    fault_tolerance_ablation();
+    local_sgd_ablation();
+}
+
+fn scheduler_ablation() {
+    println!("=== ablation 1: scheduling strategy (Eq. 2) ===\n");
+    // Heterogeneous fleet: 3080s, 3060s, a couple of 4090s.
+    let mut peers: Vec<PeerSpec> = Vec::new();
+    for (gpu, n) in [("RTX 3080", 10), ("RTX 3060", 10), ("RTX 4090", 2)] {
+        for _ in 0..n {
+            let mut p = sched::build::uniform_peers(lookup(gpu).unwrap(), 0.5, 1);
+            p[0].id = peers.len();
+            peers.push(p.remove(0));
+        }
+    }
+    // Bert-Large split into 66 sub-tasks.
+    let g = TransformerConfig::bert_large().build_graph();
+    let d = Decomposition::chain_balanced(&g, 66);
+    let tasks: Vec<TaskSpec> = sched::build::tasks_from_decomposition(&g, &d, true);
+
+    let mut rng = Rng::new(7);
+    let mut t = Table::new(&["strategy", "makespan", "vs best"]);
+    let full = sched::schedule(&tasks, &peers).unwrap().makespan();
+    let lpt_only = sched::lpt(&tasks, &peers).unwrap().makespan();
+    let rr = sched::round_robin(&tasks, &peers).unwrap().makespan();
+    let rand: f64 = (0..10)
+        .map(|_| sched::random_schedule(&tasks, &peers, &mut rng).unwrap().makespan())
+        .sum::<f64>()
+        / 10.0;
+    for (name, v) in [
+        ("LPT + local search (ours)", full),
+        ("LPT only", lpt_only),
+        ("round-robin (hetero-blind)", rr),
+        ("random (10-run mean)", rand),
+    ] {
+        t.row(&[name.to_string(), human_secs(v), format!("{:.2}×", v / full)]);
+    }
+    t.print();
+    assert!(full <= lpt_only + 1e-12);
+    assert!(full < rr && full < rand);
+    println!();
+}
+
+fn compression_ablation() {
+    println!("=== ablation 2: communication compression (§2.3) ===\n");
+    let n = 512 * 1024; // a Bert-Large-ish activation, elements
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let link = LinkModel::from_ms_mbps(10.0, 100.0);
+    let mut t = Table::new(&["codec", "wire bytes", "ratio", "max |err|", "T_comm @100Mbps"]);
+    for codec in [Codec::None, Codec::Int8, Codec::TopK { ratio: 0.1 }, Codec::TopK { ratio: 0.01 }] {
+        let enc = codec.encode(&x);
+        let dec = codec.decode(&enc, n);
+        let err = x.iter().zip(&dec).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        t.row(&[
+            format!("{codec:?}"),
+            human_bytes(enc.len() as u64),
+            format!("{:.3}", codec.ratio(n)),
+            format!("{err:.4}"),
+            human_secs(link.time(enc.len() as u64)),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+fn fault_tolerance_ablation() {
+    println!("=== ablation 3: backup pool + checkpoint vs cold restart (§3.2) ===\n");
+    let cfg = TransformerConfig::tiny();
+    let make_cluster = || {
+        let g = cfg.build_graph();
+        let d = Decomposition::chain_balanced(&g, 4);
+        let net =
+            Arc::new(NetworkSim::new(Topology::uniform(LinkModel::local()), 0.0));
+        SimCluster::new(
+            g,
+            d,
+            net,
+            Box::new(|| Box::new(RefEngine::new())),
+            Box::new(|| Box::new(Adam::new(0.01))),
+            5,
+        )
+        .unwrap()
+    };
+    let feed = |c: &mut SimCluster| {
+        let tokens: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|i| ((i * 7 + 3) % cfg.vocab) as i32).collect();
+        let labels: Vec<i32> =
+            tokens.iter().map(|&t| ((t as usize + 7) % cfg.vocab) as i32).collect();
+        c.feed("tokens", Tensor::from_ivec(&[cfg.batch, cfg.seq], tokens)).unwrap();
+        c.feed("labels", Tensor::from_ivec(&[cfg.batch, cfg.seq], labels)).unwrap();
+    };
+
+    // Train 20 steps, crash, recover from checkpoint, train 10 more.
+    let mut warm = make_cluster();
+    for _ in 0..20 {
+        feed(&mut warm);
+        warm.train_step().unwrap();
+    }
+    warm.fail_compnode(2);
+    warm.recover_compnode(2).unwrap();
+    let mut warm_loss = f32::NAN;
+    for _ in 0..10 {
+        feed(&mut warm);
+        warm_loss = warm.train_step().unwrap().loss.unwrap();
+    }
+
+    // Cold restart: lose everything at the crash, 10 steps from scratch.
+    let mut cold = make_cluster();
+    let mut cold_loss = f32::NAN;
+    for _ in 0..10 {
+        feed(&mut cold);
+        cold_loss = cold.train_step().unwrap().loss.unwrap();
+    }
+
+    let mut t = Table::new(&["strategy", "loss after crash + 10 steps"]);
+    t.row(&["backup + supernode checkpoint (ours)".into(), format!("{warm_loss:.4}")]);
+    t.row(&["cold restart".into(), format!("{cold_loss:.4}")]);
+    t.print();
+    assert!(warm_loss < cold_loss, "checkpoint recovery must retain progress");
+    println!();
+}
+
+fn local_sgd_ablation() {
+    println!("=== ablation 4: Local-SGD sync period (§2.3) ===\n");
+    // Parameter-sync traffic for a 110M-param model over 1000 steps.
+    let param_bytes: u64 = 110_000_000 * 4;
+    let steps = 1000u64;
+    let link = LinkModel::from_ms_mbps(10.0, 100.0);
+    let mut t = Table::new(&["sync period", "syncs", "traffic", "modelled sync time"]);
+    for period in [1usize, 4, 16, 64] {
+        let mut policy = LocalSgdPolicy::every(period);
+        let syncs = (0..steps).filter(|_| policy.tick()).count() as u64;
+        let bytes = syncs * param_bytes;
+        t.row(&[
+            format!("every {period}"),
+            syncs.to_string(),
+            human_bytes(bytes),
+            human_secs(link.time(param_bytes) * syncs as f64),
+        ]);
+    }
+    t.print();
+}

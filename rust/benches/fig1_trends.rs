@@ -1,0 +1,64 @@
+//! Regenerates paper **Figure 1**: "The trends of GPU and model memory" —
+//! the motivating gap between model memory requirements and single-GPU
+//! memory, as data series plus fitted growth rates.
+//!
+//! Run: `cargo bench --bench fig1_trends`
+
+use fusionai::benchutil::Table;
+use fusionai::perf::trends::{growth_gap, GPU_TREND, MODEL_TREND};
+use fusionai::util::human_bytes;
+
+fn main() {
+    println!("=== Figure 1: the trends of GPU and model memory ===\n");
+    println!("series A — landmark models (fp16 inference / Adam training footprint):");
+    let mut t = Table::new(&["year", "model", "params", "infer mem", "train mem"]);
+    for m in MODEL_TREND {
+        t.row(&[
+            m.year.to_string(),
+            m.name.to_string(),
+            format!("{:.2e}", m.params),
+            human_bytes(m.infer_bytes() as u64),
+            human_bytes(m.train_bytes() as u64),
+        ]);
+    }
+    t.print();
+
+    println!("\nseries B — flagship training GPUs:");
+    let mut t = Table::new(&["year", "GPU", "memory"]);
+    for g in GPU_TREND {
+        t.row(&[g.year.to_string(), g.name.to_string(), format!("{:.0} GB", g.memory_gb)]);
+    }
+    t.print();
+
+    let (model_cagr, gpu_cagr) = growth_gap();
+    println!(
+        "\nfitted growth: model memory {:.0}%/yr vs GPU memory {:.0}%/yr ({}× faster)",
+        model_cagr * 100.0,
+        gpu_cagr * 100.0,
+        (model_cagr / gpu_cagr).round()
+    );
+    println!(
+        "figure-1 conclusion reproduced: model-memory growth outpaces GPU memory → \
+         multi-device (and, the paper argues, decentralized consumer-device) execution is forced."
+    );
+    assert!(model_cagr > 5.0 * gpu_cagr);
+
+    // The gap, concretely: how many flagship GPUs to HOLD each model.
+    println!("\nGPUs-to-hold (contemporary flagship, training footprint):");
+    let mut t = Table::new(&["model", "year", "contemporary GPU", "GPUs needed"]);
+    for m in MODEL_TREND {
+        let gpu = GPU_TREND
+            .iter()
+            .rev()
+            .find(|g| g.year <= m.year)
+            .unwrap_or(&GPU_TREND[0]);
+        let need = (m.train_bytes() / (gpu.memory_gb * 1e9)).ceil();
+        t.row(&[
+            m.name.to_string(),
+            m.year.to_string(),
+            gpu.name.to_string(),
+            format!("{need:.0}"),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,109 @@
+//! Regenerates paper **Figure 4**: "Partitioned sub-DAGs of Bert-Large on
+//! 50 RTX 3080" — 24 transformer layers, each split into an attention block
+//! and an FFN block, partitioned with the Eq.-2 load-balancing scheduler;
+//! plus the paper's 4×H100 grouping (sub-DAGs 1, 2–25, 26–49, 50).
+//!
+//! Run: `cargo bench --bench fig4_partition`
+
+use fusionai::benchutil::{bench, Table};
+use fusionai::decompose::Decomposition;
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::perf::gpus::lookup;
+use fusionai::sched;
+use fusionai::util::{human_flops, human_secs};
+
+fn main() {
+    let cfg = TransformerConfig::bert_large();
+    let g = cfg.build_graph();
+    println!(
+        "Bert-Large: {} layers × (attention block + FFN block) | {} ops | {} params | {} fwd FLOPs/batch(B={})",
+        cfg.layers,
+        g.len(),
+        cfg.param_count(),
+        human_flops(g.total_fwd_flops()),
+        cfg.batch,
+    );
+
+    // ---- 50× RTX 3080 (Figure 4 proper) ----
+    let d50 = Decomposition::chain_balanced(&g, 50);
+    d50.validate(&g).unwrap();
+    let loads: Vec<f64> = (0..50).map(|s| d50.sub_flops(&g, s)).collect();
+    let total: f64 = loads.iter().sum();
+    let max = loads.iter().cloned().fold(0.0, f64::max);
+    let nonzero = loads.iter().filter(|&&l| l > 0.0).count();
+    println!(
+        "\n50-way partition: {} non-empty sub-DAGs | max/mean load {:.3} | cut traffic {} bytes/batch",
+        nonzero,
+        max / (total / 50.0),
+        d50.cut_bytes(&g)
+    );
+    let mut t = Table::new(&["sub-DAG", "ops", "FLOPs", "share", "blocks inside"]);
+    for s in [0usize, 1, 2, 24, 25, 48, 49] {
+        let blocks: Vec<String> = d50.subgraphs[s]
+            .nodes
+            .iter()
+            .map(|&n| g.node(n).name.clone())
+            .filter(|n| n.ends_with(".attn") || n.ends_with(".ffn"))
+            .collect();
+        t.row(&[
+            (s + 1).to_string(),
+            d50.subgraphs[s].nodes.len().to_string(),
+            human_flops(loads[s]),
+            format!("{:.2}%", 100.0 * loads[s] / total),
+            if blocks.is_empty() { "-".into() } else { blocks.join(", ") },
+        ]);
+    }
+    t.print();
+
+    // Per-device time via the scheduler (Eq. 2) on a uniform 3080 fleet.
+    let tasks = sched::build::tasks_from_decomposition(&g, &d50, false);
+    let peers = sched::build::uniform_peers(lookup("RTX 3080").unwrap(), 0.5, 50);
+    let s = sched::schedule(&tasks, &peers).unwrap();
+    s.validate(&tasks, &peers).unwrap();
+    println!(
+        "\nEq.2 schedule onto 50×3080: makespan {} | min load {} | spread {:.1}%",
+        human_secs(s.makespan()),
+        human_secs(s.loads.iter().cloned().fold(f64::INFINITY, f64::min)),
+        100.0 * (s.makespan() - s.loads.iter().cloned().fold(f64::INFINITY, f64::min))
+            / s.makespan()
+    );
+
+    // ---- the paper's 4×H100 grouping: sub-DAGs 1, 2–25, 26–49, 50 ----
+    println!("\n4×H100 grouping of the same 50 sub-DAGs (paper §4):");
+    let groups: [(usize, usize); 4] = [(0, 1), (1, 25), (25, 49), (49, 50)];
+    let h100 = lookup("H100").unwrap();
+    let mut t = Table::new(&["H100", "sub-DAGs", "FLOPs", "time @λ=0.5"]);
+    for (i, (lo, hi)) in groups.iter().enumerate() {
+        let fl: f64 = (*lo..*hi).map(|s| loads[s]).sum();
+        t.row(&[
+            (i + 1).to_string(),
+            format!("{}–{}", lo + 1, hi),
+            human_flops(fl),
+            human_secs(fl / (0.5 * h100.peak_tensor_flops())),
+        ]);
+    }
+    t.print();
+
+    // Heterogeneous variant: proportional split over a mixed fleet.
+    let speeds: Vec<f64> = (0..50)
+        .map(|i| if i % 5 == 0 { 97.5e12 } else { 59.5e12 }) // 4080s sprinkled in
+        .collect();
+    let dh = Decomposition::chain_proportional(&g, &speeds);
+    dh.validate(&g).unwrap();
+    let t_max = (0..50)
+        .map(|s| dh.sub_flops(&g, s) / (0.5 * speeds[s]))
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nheterogeneous fleet (every 5th card a 4080): proportional split stage time {} (uniform split would be {})",
+        human_secs(t_max),
+        human_secs(max / (0.5 * 59.5e12)),
+    );
+
+    // Partition cost itself (the broker pays this per job submission).
+    bench("chain_balanced_50way_bert", 3, 20, |_| {
+        Decomposition::chain_balanced(&g, 50).num_subgraphs()
+    });
+    bench("eq2_schedule_50tasks_50peers", 3, 50, |_| {
+        sched::schedule(&tasks, &peers).unwrap().makespan()
+    });
+}

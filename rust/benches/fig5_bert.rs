@@ -1,0 +1,109 @@
+//! Regenerates paper **Figure 5**: "System performance of Bert-Large with
+//! different communication bandwidth and latency" — Eq.-3 latency and
+//! Eq.-4 pipelined throughput (n_b = 512) of 50× RTX 3080 across the
+//! (bandwidth, latency) grid, against the 4× H100 baseline, plus the
+//! §2.3 compression mitigation.
+//!
+//! Run: `cargo bench --bench fig5_bert`
+
+use fusionai::benchutil::Table;
+use fusionai::compress::Codec;
+use fusionai::decompose::Decomposition;
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::perf::comm::LinkModel;
+use fusionai::perf::gpus::lookup;
+use fusionai::perf::paleo::{DeviceProfile, PaleoModel};
+use fusionai::pipeline::analytics::PipelineEstimate;
+use fusionai::util::human_secs;
+
+const N_B: usize = 512;
+
+fn estimate(
+    cfg: &TransformerConfig,
+    devices: usize,
+    gpu: &str,
+    link: LinkModel,
+    codec: Option<Codec>,
+) -> PipelineEstimate {
+    let g = cfg.build_graph();
+    let d = Decomposition::chain_balanced(&g, devices);
+    let models: Vec<PaleoModel> = (0..devices)
+        .map(|_| PaleoModel::new(DeviceProfile::with_lambda(lookup(gpu).unwrap(), 0.5)))
+        .collect();
+    let mut est = PipelineEstimate::from_decomposition(&g, &d, &models, link, false);
+    // Compression shrinks the bandwidth-proportional share of every wire
+    // payload by the codec ratio (§2.3); the α latency share is unaffected.
+    // Exact for one inbound tensor per stage: r·(α+βM) + (1−r)·α = α + β·rM.
+    if let Some(c) = codec {
+        let ratio = c.ratio(1_000_000);
+        for s in est.stages.iter_mut() {
+            s.comm_s = s.comm_s * ratio + link.alpha * (1.0 - ratio);
+        }
+    }
+    est
+}
+
+fn main() {
+    let cfg = TransformerConfig::bert_large();
+    println!(
+        "=== Figure 5: Bert-Large (B={}, S={}) | 50× RTX 3080 vs 4× H100 | n_b = {N_B} ===\n",
+        cfg.batch, cfg.seq
+    );
+
+    let baseline = estimate(&cfg, 4, "H100", LinkModel::datacenter(), None);
+    println!(
+        "4×H100 baseline: latency {} | T_512 {} | throughput {:.1} batches/s\n",
+        human_secs(baseline.latency()),
+        human_secs(baseline.pipelined_time(N_B)),
+        baseline.throughput(N_B)
+    );
+
+    let bandwidths = [10.0, 100.0, 1_000.0, 10_000.0, 100_000.0, 400_000.0];
+    let latencies = [1.0, 10.0, 50.0];
+
+    for &alpha_ms in &latencies {
+        println!("--- link latency α = {alpha_ms} ms ---");
+        let mut t = Table::new(&[
+            "bandwidth (Mbps)", "latency Eq.3", "T_512 Eq.4", "throughput (b/s)",
+            "vs H100", "regime", "w/ int8 comp: vs H100",
+        ]);
+        for &mbps in &bandwidths {
+            let link = LinkModel::from_ms_mbps(alpha_ms, mbps);
+            let est = estimate(&cfg, 50, "RTX 3080", link, None);
+            let est_c = estimate(&cfg, 50, "RTX 3080", link, Some(Codec::Int8));
+            let ratio = est.steady_state_throughput() / baseline.steady_state_throughput();
+            let ratio_c =
+                est_c.steady_state_throughput() / baseline.steady_state_throughput();
+            t.row(&[
+                format!("{mbps:.0}"),
+                human_secs(est.latency()),
+                human_secs(est.pipelined_time(N_B)),
+                format!("{:.3}", est.throughput(N_B)),
+                format!("{ratio:.3}×"),
+                if est.comm_bound() { "comm" } else { "compute" }.to_string(),
+                format!("{ratio_c:.3}×"),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    // Shape assertions the paper's narrative requires.
+    let slow = estimate(&cfg, 50, "RTX 3080", LinkModel::from_ms_mbps(10.0, 10.0), None);
+    let fast = estimate(&cfg, 50, "RTX 3080", LinkModel::datacenter(), None);
+    assert!(slow.latency() > baseline.latency() * 100.0, "consumer latency >> H100");
+    let fast_ratio = fast.steady_state_throughput() / baseline.steady_state_throughput();
+    assert!(
+        (0.5..2.0).contains(&fast_ratio),
+        "compute-bound consumer throughput ≈ H100 (got {fast_ratio:.2}×)"
+    );
+    println!(
+        "shape check: latency gap at 10 Mbps = {:.0}×; compute-bound throughput ratio = {fast_ratio:.2}×",
+        slow.latency() / baseline.latency()
+    );
+    println!(
+        "takeaway (paper §4): latency with 50×3080 is far larger, but once links keep\n\
+         R_p ≤ C_p the pipelined throughput matches 4×H100 at ~29% of the hardware cost;\n\
+         int8 compression (§2.3) moves the crossover ~4× down the bandwidth axis."
+    );
+}

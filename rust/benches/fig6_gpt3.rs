@@ -1,0 +1,107 @@
+//! Regenerates paper **Figure 6**: "System performance of GPT3 (24 layers
+//! with the hidden size of 4096)" — the Figure-5 sweep on the larger model,
+//! where activations are 8× bigger ([1, 2048, 4096] vs [8, 512, 1024] is
+//! the same bytes but FLOPs/stage are ~5× higher, so the compute-bound
+//! crossover arrives at lower bandwidth.
+//!
+//! Run: `cargo bench --bench fig6_gpt3`
+
+use fusionai::benchutil::Table;
+use fusionai::decompose::Decomposition;
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::perf::comm::LinkModel;
+use fusionai::perf::gpus::lookup;
+use fusionai::perf::paleo::{DeviceProfile, PaleoModel};
+use fusionai::pipeline::analytics::PipelineEstimate;
+use fusionai::util::{human_bytes, human_flops, human_secs};
+
+const N_B: usize = 512;
+
+fn estimate(
+    cfg: &TransformerConfig,
+    devices: usize,
+    gpu: &str,
+    link: LinkModel,
+) -> PipelineEstimate {
+    let g = cfg.build_graph();
+    let d = Decomposition::chain_balanced(&g, devices);
+    let models: Vec<PaleoModel> = (0..devices)
+        .map(|_| PaleoModel::new(DeviceProfile::with_lambda(lookup(gpu).unwrap(), 0.5)))
+        .collect();
+    PipelineEstimate::from_decomposition(&g, &d, &models, link, false)
+}
+
+fn main() {
+    let cfg = TransformerConfig::gpt3_24x4096();
+    let g = cfg.build_graph();
+    println!(
+        "=== Figure 6: GPT-3 variant (24 layers, hidden 4096; B={}, S={}) ===",
+        cfg.batch, cfg.seq
+    );
+    println!(
+        "{} params | {} fwd FLOPs/batch | stage activation {}\n",
+        cfg.param_count(),
+        human_flops(g.total_fwd_flops()),
+        human_bytes((cfg.batch * cfg.seq * cfg.dim * 4) as u64)
+    );
+
+    let baseline = estimate(&cfg, 4, "H100", LinkModel::datacenter());
+    println!(
+        "4×H100 baseline: latency {} | throughput {:.2} batches/s\n",
+        human_secs(baseline.latency()),
+        baseline.throughput(N_B)
+    );
+
+    for &alpha_ms in &[1.0, 10.0, 50.0] {
+        println!("--- link latency α = {alpha_ms} ms ---");
+        let mut t = Table::new(&[
+            "bandwidth (Mbps)", "latency Eq.3", "T_512 Eq.4", "throughput (b/s)", "vs H100", "regime",
+        ]);
+        for &mbps in &[10.0, 100.0, 1_000.0, 10_000.0, 100_000.0, 400_000.0] {
+            let link = LinkModel::from_ms_mbps(alpha_ms, mbps);
+            let est = estimate(&cfg, 50, "RTX 3080", link);
+            let ratio = est.steady_state_throughput() / baseline.steady_state_throughput();
+            t.row(&[
+                format!("{mbps:.0}"),
+                human_secs(est.latency()),
+                human_secs(est.pipelined_time(N_B)),
+                format!("{:.3}", est.throughput(N_B)),
+                format!("{ratio:.3}×"),
+                if est.comm_bound() { "comm" } else { "compute" }.to_string(),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    // GPT-3's memory wall: which devices can even hold a 50-way shard?
+    let d50 = Decomposition::chain_balanced(&g, 50);
+    let max_shard: u64 = (0..50).map(|s| d50.sub_gpu_bytes(&g, s)).max().unwrap();
+    println!(
+        "memory: largest 50-way training shard needs {} — {} on an RTX 3080 (10 GB), the\n\
+        fine-grained-partition motivation of §3.1 P3",
+        human_bytes(max_shard),
+        if max_shard <= lookup("RTX 3080").unwrap().memory_bytes() { "fits" } else { "does NOT fit" },
+    );
+
+    // Shape checks mirroring Figure 6's narrative.
+    let fast = estimate(&cfg, 50, "RTX 3080", LinkModel::datacenter());
+    let slow = estimate(&cfg, 50, "RTX 3080", LinkModel::from_ms_mbps(10.0, 100.0));
+    let fast_ratio = fast.steady_state_throughput() / baseline.steady_state_throughput();
+    assert!((0.5..2.0).contains(&fast_ratio), "compute-bound ratio {fast_ratio}");
+    assert!(slow.steady_state_throughput() < 0.1 * baseline.steady_state_throughput());
+    // Crossover happens at LOWER bandwidth than Bert-Large (more FLOPs per
+    // byte moved): find first compute-bound bandwidth at α=1ms.
+    let bert = TransformerConfig::bert_large();
+    let crossover = |cfg: &TransformerConfig| -> f64 {
+        for &mbps in &[10.0, 100.0, 1_000.0, 10_000.0, 100_000.0, 400_000.0, 4_000_000.0] {
+            if !estimate(cfg, 50, "RTX 3080", LinkModel::from_ms_mbps(0.1, mbps)).comm_bound() {
+                return mbps;
+            }
+        }
+        f64::INFINITY
+    };
+    let (xb, xg) = (crossover(&bert), crossover(&cfg));
+    println!("compute-bound crossover: bert-large at {xb:.0} Mbps vs gpt3 at {xg:.0} Mbps");
+    assert!(xg <= xb, "bigger model ⇒ earlier crossover");
+}

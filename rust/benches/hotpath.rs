@@ -1,0 +1,157 @@
+//! Hot-path microbenchmarks (§Perf deliverable): the L3 loops that run per
+//! message / per step / per job, with the targets from DESIGN.md §Perf.
+//! Before/after numbers for the optimization pass live in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+
+use fusionai::benchutil::{bench, black_box};
+use fusionai::cluster::SimCluster;
+use fusionai::compress::Codec;
+use fusionai::dag::autodiff::backward_plan;
+use fusionai::decompose::Decomposition;
+use fusionai::dht::Dht;
+use fusionai::exec::{Adam, Engine, RefEngine};
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::net::{NetworkSim, Topology};
+use fusionai::perf::comm::LinkModel;
+use fusionai::perf::gpus::lookup;
+use fusionai::pipeline::schedule::MicrobatchSchedule;
+use fusionai::runtime::Runtime;
+use fusionai::sched;
+use fusionai::tensor::{matmul_into, Tensor};
+use fusionai::util::{json, Rng};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // --- L3 numeric kernels (RefEngine path) ---
+    let m = 128;
+    let a: Vec<f32> = (0..m * m).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..m * m).map(|_| rng.normal() as f32).collect();
+    let mut c = vec![0.0f32; m * m];
+    let r = bench("matmul_128x128x128", 5, 50, |_| {
+        matmul_into(&a, &b, &mut c, m, m, m);
+        c[0]
+    });
+    let gflops = 2.0 * (m as f64).powi(3) / r.median_s / 1e9;
+    println!("  ↳ {gflops:.2} GFLOP/s single-thread");
+
+    let g = TransformerConfig::tiny().build_graph();
+    let attn_node = g.by_name("layer0.attn").unwrap().clone();
+    let mut eng = RefEngine::new();
+    let params = eng.init_params(&attn_node, &mut rng).unwrap();
+    let x = Tensor::randn(&[2, 16, 32], 1.0, &mut rng);
+    bench("ref_attention_fwd_2x16x32", 5, 100, |_| {
+        eng.forward(&attn_node, &[&x], &params).unwrap().numel()
+    });
+    let dy = Tensor::randn(&[2, 16, 32], 1.0, &mut rng);
+    bench("ref_attention_bwd_2x16x32", 5, 100, |_| {
+        eng.backward(&attn_node, &[&x], &params, Some(&dy)).unwrap().param_grads.len()
+    });
+
+    // --- scheduler on job-submission scale (target: <100 ms for
+    //     Bert-Large-scale DAGs on 50 nodes) ---
+    let bert = TransformerConfig::bert_large().build_graph();
+    let r = bench("decompose_bert_50way", 3, 20, |_| {
+        Decomposition::chain_balanced(&bert, 50).num_subgraphs()
+    });
+    assert!(r.median_s < 0.1, "decompose target <100ms, got {}", r.median_s);
+    let d = Decomposition::chain_balanced(&bert, 50);
+    let tasks = sched::build::tasks_from_decomposition(&bert, &d, true);
+    let peers = sched::build::uniform_peers(lookup("RTX 3080").unwrap(), 0.5, 50);
+    let r = bench("schedule_50x50", 3, 50, |_| {
+        sched::schedule(&tasks, &peers).unwrap().makespan()
+    });
+    assert!(r.median_s < 0.1, "schedule target <100ms, got {}", r.median_s);
+    bench("backward_plan_bert", 3, 50, |_| backward_plan(&bert).len());
+
+    // --- DHT ops (per-message path) ---
+    let mut dht = Dht::new(3);
+    for p in 0..32 {
+        dht.join(p).unwrap();
+    }
+    let blob = vec![0u8; 4096];
+    bench("dht_put_4k_repl3", 10, 2000, |i| {
+        dht.put(&format!("bench/{}", i % 512), blob.clone()).unwrap().len()
+    });
+    bench("dht_get_4k", 10, 2000, |i| dht.get(&format!("bench/{}", i % 512)).unwrap().len());
+    bench("dht_join_leave_rebalance", 2, 20, |i| {
+        dht.join(1000 + i).unwrap();
+        dht.leave(1000 + i).unwrap();
+        0
+    });
+
+    // --- codecs (per-hop payload path) ---
+    let act: Vec<f32> = (0..64 * 1024).map(|_| rng.normal() as f32).collect();
+    for codec in [Codec::None, Codec::Int8, Codec::TopK { ratio: 0.1 }] {
+        let enc = codec.encode(&act);
+        bench(&format!("encode_256KiB_{codec:?}"), 3, 50, |_| codec.encode(&act).len());
+        bench(&format!("decode_256KiB_{codec:?}"), 3, 50, |_| {
+            codec.decode(&enc, act.len()).len()
+        });
+    }
+
+    // --- manifest/json (job-submission path) ---
+    let manifest = std::fs::read_to_string("artifacts/gpt-tiny/manifest.json").ok();
+    if let Some(text) = manifest {
+        bench("manifest_json_parse", 5, 200, |_| {
+            json::parse(&text).unwrap().get("stages").is_some() as usize
+        });
+    }
+
+    // --- pipeline schedule simulation (planning path) ---
+    bench("gpipe_schedule_8x32_simulate", 3, 100, |_| {
+        MicrobatchSchedule::gpipe(8, 32).simulate(1.0, 2.0, 0.5) as usize
+    });
+
+    // --- SimCluster full train step (tiny transformer, 4 compnodes) ---
+    let cfg = TransformerConfig::tiny();
+    let mk = || {
+        let g = cfg.build_graph();
+        let d = Decomposition::chain_balanced(&g, 4);
+        let net = Arc::new(NetworkSim::new(Topology::uniform(LinkModel::local()), 0.0));
+        SimCluster::new(
+            g,
+            d,
+            net,
+            Box::new(|| Box::new(RefEngine::new())),
+            Box::new(|| Box::new(Adam::new(0.01))),
+            5,
+        )
+        .unwrap()
+    };
+    let mut cluster = mk();
+    let tokens: Vec<i32> =
+        (0..cfg.batch * cfg.seq).map(|i| ((i * 7 + 3) % cfg.vocab) as i32).collect();
+    let labels: Vec<i32> =
+        tokens.iter().map(|&t| ((t as usize + 7) % cfg.vocab) as i32).collect();
+    bench("simcluster_train_step_tiny_4way", 3, 30, |_| {
+        cluster
+            .feed("tokens", Tensor::from_ivec(&[cfg.batch, cfg.seq], tokens.clone()))
+            .unwrap();
+        cluster
+            .feed("labels", Tensor::from_ivec(&[cfg.batch, cfg.seq], labels.clone()))
+            .unwrap();
+        cluster.train_step().unwrap().updated
+    });
+
+    // --- XLA stage execution (the production hot path), if artifacts exist ---
+    if std::path::Path::new("artifacts/gpt-tiny/manifest.json").exists() {
+        let mut rt = Runtime::cpu().unwrap();
+        let manifest = rt.load_dir(std::path::Path::new("artifacts/gpt-tiny")).unwrap();
+        let specs = &manifest.stage_params["block0"];
+        let mut prng = Rng::new(2);
+        let mut args: Vec<Tensor> = specs.iter().map(|s| s.materialize(&mut prng)).collect();
+        let batch = manifest.config_usize("batch").unwrap();
+        let seq = manifest.config_usize("seq").unwrap();
+        let dim = manifest.config_usize("dim").unwrap();
+        args.push(Tensor::randn(&[batch, seq, dim], 1.0, &mut prng));
+        bench("xla_block0_fwd_gpt_tiny", 5, 100, |_| {
+            black_box(rt.run("block0_fwd", &args).unwrap().len())
+        });
+    } else {
+        println!("(artifacts/gpt-tiny missing — run `make artifacts` for the XLA hot-path bench)");
+    }
+}

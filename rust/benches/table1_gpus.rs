@@ -1,0 +1,57 @@
+//! Regenerates paper **Table 1**: "Comparing different GPUs", extended with
+//! the achievable-throughput column our perf model derives (λ = 0.5) and
+//! the aggregate-FLOPS headline ratio.
+//!
+//! Run: `cargo bench --bench table1_gpus`
+
+use fusionai::benchutil::{bench, Table};
+use fusionai::perf::gpus::{lookup, GpuLevel, GPU_DB};
+
+fn main() {
+    println!("=== Table 1: Comparing different GPUs ===\n");
+    let mut t = Table::new(&[
+        "GPU",
+        "TFLOPS (FP32)",
+        "TFLOPS FP32 Tensor Core",
+        "Memory",
+        "Level",
+        "achieved @λ=0.5",
+        "$/TFLOP",
+    ]);
+    for g in GPU_DB {
+        t.row(&[
+            g.name.to_string(),
+            format!("{:.2}", g.tflops_fp32),
+            format!("{:.2}", g.tflops_tensor),
+            format!("{:.0}GB", g.memory_gb),
+            g.level.to_string(),
+            format!("{:.1} TFLOPS", 0.5 * g.tflops_tensor),
+            format!("{:.0}", g.price_usd / g.tflops_tensor),
+        ]);
+    }
+    t.print();
+
+    // The paper's aggregate argument: 50 consumer cards vs 4 flagships.
+    let r3080 = lookup("RTX 3080").unwrap();
+    let h100 = lookup("H100").unwrap();
+    let flops_ratio = 50.0 * r3080.peak_tensor_flops() / (4.0 * h100.peak_tensor_flops());
+    let price_ratio = 50.0 * r3080.price_usd / (4.0 * h100.price_usd);
+    println!(
+        "\n50× RTX 3080 vs 4× H100: aggregate tensor FLOPS ratio {:.2}× at {:.2}× the price",
+        flops_ratio, price_ratio
+    );
+    assert!((0.9..1.1).contains(&flops_ratio));
+
+    let consumer_total: f64 = GPU_DB
+        .iter()
+        .filter(|g| g.level == GpuLevel::Consumer)
+        .map(|g| g.tflops_tensor)
+        .sum();
+    println!("consumer rows in DB: Σ tensor TFLOPS = {consumer_total:.0}");
+
+    // Micro: DB lookup cost (used on every registration).
+    bench("gpu_db_lookup", 100, 1000, |i| {
+        let name = GPU_DB[i % GPU_DB.len()].name;
+        lookup(name).unwrap().tflops_tensor
+    });
+}

@@ -1,0 +1,159 @@
+//! Benchmark harness (criterion is not available offline, so `cargo bench`
+//! targets use `harness = false` binaries built on this module).
+//!
+//! Provides wall-clock micro-benchmarking with warmup + outlier-robust
+//! statistics, and fixed-width table rendering for the figure/table
+//! regeneration benches.
+
+use std::time::Instant;
+
+use crate::util::human_secs;
+use crate::util::stats::Sample;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> f64 {
+        self.median_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+/// `f` receives the iteration index and returns a value that is
+/// black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut(usize) -> T) -> BenchResult {
+    for i in 0..warmup {
+        black_box(f(i));
+    }
+    let mut sample = Sample::new();
+    for i in 0..iters {
+        let t0 = Instant::now();
+        black_box(f(i));
+        sample.add(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: sample.median(),
+        mean_s: sample.mean(),
+        p99_s: sample.p99(),
+        min_s: sample.min(),
+    };
+    println!(
+        "bench {:<42} median {:>12}  mean {:>12}  p99 {:>12}  (n={})",
+        r.name,
+        human_secs(r.median_s),
+        human_secs(r.mean_s),
+        human_secs(r.p99_s),
+        iters
+    );
+    r
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table renderer for regenerating the paper's tables/figures
+/// as text.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 10, |_| {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.p99_s);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["GPU", "TFLOPS"]);
+        t.row(&["RTX 3080".to_string(), "59.5".to_string()]);
+        t.row(&["H100".to_string(), "756".to_string()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("RTX 3080"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

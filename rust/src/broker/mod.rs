@@ -1,0 +1,454 @@
+//! The broker (paper §3.2): bridges job submitters and compnodes.
+//!
+//! Responsibilities, exactly as the paper lists them:
+//! * register computing providers as compnodes with unique IDs;
+//! * periodically ping-pong compnodes to detect offline peers;
+//! * keep a **backup pool** of registered-but-idle compnodes and promote a
+//!   replacement when an active compnode with unfinished tasks goes offline;
+//! * decompose submitted jobs into sub-tasks (via [`crate::decompose`]) and
+//!   schedule them onto compnodes with balanced workloads (via
+//!   [`crate::sched`], using the §3.7 hardware performance predictor).
+//!
+//! The broker is a deterministic state machine over a caller-supplied clock
+//! (virtual seconds), so every interleaving is testable; the live cluster
+//! drives it from real time.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dag::Graph;
+use crate::decompose::Decomposition;
+use crate::perf::gpus::GpuSpec;
+use crate::perf::paleo::DeviceProfile;
+use crate::sched::{self, PeerSpec, Schedule, TaskSpec};
+
+/// Compnode classification (paper §3.3): supernodes are stable long-term
+/// providers; antnodes come and go.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeClass {
+    Supernode,
+    Antnode,
+}
+
+/// Liveness/duty state of a registered compnode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Executing assigned tasks.
+    Active,
+    /// Registered, healthy, held in the backup pool.
+    Backup,
+    /// Missed heartbeats; presumed gone.
+    Offline,
+}
+
+/// Registration record for one compnode.
+#[derive(Debug, Clone)]
+pub struct CompnodeInfo {
+    pub id: usize,
+    pub gpu: GpuSpec,
+    /// Fitted scaling-down factor λ_p (paper §3.7).
+    pub lambda: f64,
+    pub class: NodeClass,
+}
+
+impl CompnodeInfo {
+    /// Convert to a scheduler peer spec.
+    pub fn peer_spec(&self) -> PeerSpec {
+        PeerSpec {
+            id: self.id,
+            profile: DeviceProfile::with_lambda(&self.gpu, self.lambda),
+            gpu_capacity: self.gpu.memory_bytes(),
+            cpu_capacity: 2 * self.gpu.memory_bytes(),
+            disk_capacity: 64 * self.gpu.memory_bytes(),
+        }
+    }
+}
+
+/// Broker event log entry (observability + test assertions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Registered { node: usize, backup: bool },
+    Offline { node: usize },
+    Promoted { backup: usize, replacing: usize },
+    JobSubmitted { job: usize, subtasks: usize },
+    Rescheduled { job: usize, from: usize, moved: usize },
+}
+
+/// A scheduled job: the decomposition plus the current assignment.
+#[derive(Debug)]
+pub struct Job {
+    pub id: usize,
+    pub graph: Graph,
+    pub decomposition: Decomposition,
+    pub tasks: Vec<TaskSpec>,
+    /// Peer ids (broker node ids) in scheduler order.
+    pub peer_ids: Vec<usize>,
+    pub schedule: Schedule,
+}
+
+impl Job {
+    /// Which broker node runs sub-task `k`.
+    pub fn node_of_task(&self, k: usize) -> usize {
+        self.peer_ids[self.schedule.of_task[k]]
+    }
+}
+
+/// The broker state machine.
+pub struct Broker {
+    next_id: usize,
+    next_job: usize,
+    nodes: HashMap<usize, (CompnodeInfo, NodeState)>,
+    last_seen: HashMap<usize, f64>,
+    /// Seconds without a heartbeat before a node is declared offline.
+    pub heartbeat_timeout: f64,
+    pub events: Vec<Event>,
+    jobs: HashMap<usize, Job>,
+}
+
+impl Broker {
+    pub fn new(heartbeat_timeout: f64) -> Broker {
+        Broker {
+            next_id: 0,
+            next_job: 0,
+            nodes: HashMap::new(),
+            last_seen: HashMap::new(),
+            heartbeat_timeout,
+            events: Vec::new(),
+            jobs: HashMap::new(),
+        }
+    }
+
+    /// Register a provider; returns its unique compnode id.
+    pub fn register(&mut self, gpu: &GpuSpec, lambda: f64, class: NodeClass, now: f64, backup: bool) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        let info = CompnodeInfo { id, gpu: gpu.clone(), lambda, class };
+        let state = if backup { NodeState::Backup } else { NodeState::Active };
+        self.nodes.insert(id, (info, state));
+        self.last_seen.insert(id, now);
+        self.events.push(Event::Registered { node: id, backup });
+        id
+    }
+
+    /// Record a ping-pong response.
+    pub fn heartbeat(&mut self, node: usize, now: f64) -> Result<()> {
+        if !self.nodes.contains_key(&node) {
+            bail!("heartbeat from unknown node {node}");
+        }
+        self.last_seen.insert(node, now);
+        Ok(())
+    }
+
+    /// Sweep for nodes that missed the timeout; marks them offline and
+    /// returns the newly offline ids.
+    pub fn check_liveness(&mut self, now: f64) -> Vec<usize> {
+        let mut dead = Vec::new();
+        for (&id, (_, state)) in self.nodes.iter_mut() {
+            if *state == NodeState::Offline {
+                continue;
+            }
+            let seen = self.last_seen.get(&id).copied().unwrap_or(f64::NEG_INFINITY);
+            if now - seen > self.heartbeat_timeout {
+                *state = NodeState::Offline;
+                dead.push(id);
+            }
+        }
+        dead.sort();
+        for &id in &dead {
+            self.events.push(Event::Offline { node: id });
+        }
+        dead
+    }
+
+    /// Voluntary departure (graceful quit).
+    pub fn deregister(&mut self, node: usize) {
+        if let Some((_, state)) = self.nodes.get_mut(&node) {
+            *state = NodeState::Offline;
+            self.events.push(Event::Offline { node });
+        }
+    }
+
+    pub fn state(&self, node: usize) -> Option<NodeState> {
+        self.nodes.get(&node).map(|(_, s)| *s)
+    }
+
+    pub fn info(&self, node: usize) -> Option<&CompnodeInfo> {
+        self.nodes.get(&node).map(|(i, _)| i)
+    }
+
+    /// Currently active node ids (sorted for determinism).
+    pub fn active_nodes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter(|(_, (_, s))| *s == NodeState::Active)
+            .map(|(&id, _)| id)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Backup pool (sorted).
+    pub fn backup_pool(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter(|(_, (_, s))| *s == NodeState::Backup)
+            .map(|(&id, _)| id)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Promote a backup to replace `failed`. Prefers supernodes, then the
+    /// fastest device (best achieved FLOPS).
+    pub fn promote_backup(&mut self, failed: usize) -> Option<usize> {
+        let pick = self
+            .nodes
+            .iter()
+            .filter(|(_, (_, s))| *s == NodeState::Backup)
+            .max_by(|(_, (a, _)), (_, (b, _))| {
+                let ka = (a.class == NodeClass::Supernode, a.lambda * a.gpu.peak_tensor_flops());
+                let kb = (b.class == NodeClass::Supernode, b.lambda * b.gpu.peak_tensor_flops());
+                ka.partial_cmp(&kb).unwrap()
+            })
+            .map(|(&id, _)| id)?;
+        self.nodes.get_mut(&pick).unwrap().1 = NodeState::Active;
+        self.events.push(Event::Promoted { backup: pick, replacing: failed });
+        Some(pick)
+    }
+
+    /// Submit a job: decompose `graph` into `n_subtasks` balanced sub-DAGs
+    /// and schedule them over the active nodes (paper §3.8). Returns the job
+    /// id.
+    pub fn submit_job(&mut self, graph: Graph, n_subtasks: usize, training: bool) -> Result<usize> {
+        let peers_ids = self.active_nodes();
+        if peers_ids.is_empty() {
+            bail!("no active compnodes");
+        }
+        let d = Decomposition::chain_balanced(&graph, n_subtasks);
+        let tasks = sched::build::tasks_from_decomposition(&graph, &d, training);
+        let peers: Vec<PeerSpec> =
+            peers_ids.iter().map(|&id| self.nodes[&id].0.peer_spec()).collect();
+        let schedule = sched::schedule(&tasks, &peers)
+            .map_err(|e| anyhow!("scheduling failed: {e}"))?;
+        let id = self.next_job;
+        self.next_job += 1;
+        self.events.push(Event::JobSubmitted { job: id, subtasks: tasks.len() });
+        self.jobs.insert(
+            id,
+            Job { id, graph, decomposition: d, tasks, peer_ids: peers_ids, schedule },
+        );
+        Ok(id)
+    }
+
+    pub fn job(&self, id: usize) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    /// Handle a node failure for a job: promote a backup (if any) and move
+    /// the failed node's sub-tasks (paper §3.2). Every *offline* peer of the
+    /// job is treated as zero-capacity so rescheduling can never place work
+    /// on a node the broker already knows is gone. Returns the moved task
+    /// ids.
+    pub fn handle_failure(&mut self, job_id: usize, failed: usize) -> Result<Vec<usize>> {
+        let replacement = self.promote_backup(failed);
+        // Snapshot liveness before borrowing the job mutably.
+        let offline: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter(|(_, (_, s))| *s == NodeState::Offline)
+            .map(|(&id, _)| id)
+            .collect();
+        let job = self.jobs.get_mut(&job_id).ok_or_else(|| anyhow!("unknown job {job_id}"))?;
+        // Extend the peer set if a fresh backup joined the job.
+        if let Some(r) = replacement {
+            if !job.peer_ids.contains(&r) {
+                job.peer_ids.push(r);
+                job.schedule.loads.push(0.0);
+                job.schedule.gpu_used.push(0);
+                job.schedule.cpu_used.push(0);
+                job.schedule.disk_used.push(0);
+            }
+        }
+        let mut peers: Vec<PeerSpec> = Vec::new();
+        let mut repl_idx = None;
+        for (i, &id) in job.peer_ids.iter().enumerate() {
+            let mut spec = self.nodes[&id].0.peer_spec();
+            if offline.contains(&id) {
+                spec.gpu_capacity = 0;
+                spec.cpu_capacity = 0;
+                spec.disk_capacity = 0;
+            }
+            peers.push(spec);
+            if Some(id) == replacement {
+                repl_idx = Some(i);
+            }
+        }
+        // Evacuate every offline carrier, starting with `failed`.
+        let mut all_moved = Vec::new();
+        let mut victims: Vec<usize> = vec![failed];
+        for &id in &offline {
+            if id != failed && job.peer_ids.contains(&id) {
+                victims.push(id);
+            }
+        }
+        for victim in victims {
+            let idx = job
+                .peer_ids
+                .iter()
+                .position(|&id| id == victim)
+                .ok_or_else(|| anyhow!("node {victim} not part of job {job_id}"))?;
+            let carries = job.schedule.of_task.iter().any(|&p| p == idx);
+            if !carries && victim != failed {
+                continue;
+            }
+            let moved =
+                sched::reschedule_failure(&mut job.schedule, &job.tasks, &peers, idx, repl_idx)
+                    .map_err(|e| anyhow!("rescheduling failed: {e}"))?;
+            all_moved.extend(moved);
+        }
+        self.events
+            .push(Event::Rescheduled { job: job_id, from: failed, moved: all_moved.len() });
+        Ok(all_moved)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::transformer::TransformerConfig;
+    use crate::perf::gpus::lookup;
+
+    fn broker_with(n_active: usize, n_backup: usize) -> Broker {
+        let mut b = Broker::new(5.0);
+        let gpu = lookup("RTX 3080").unwrap();
+        for _ in 0..n_active {
+            b.register(gpu, 0.5, NodeClass::Antnode, 0.0, false);
+        }
+        for _ in 0..n_backup {
+            b.register(gpu, 0.5, NodeClass::Antnode, 0.0, true);
+        }
+        b
+    }
+
+    #[test]
+    fn register_assigns_unique_ids() {
+        let b = broker_with(3, 2);
+        assert_eq!(b.active_nodes(), vec![0, 1, 2]);
+        assert_eq!(b.backup_pool(), vec![3, 4]);
+    }
+
+    #[test]
+    fn heartbeat_timeout_marks_offline() {
+        let mut b = broker_with(2, 0);
+        b.heartbeat(0, 4.0).unwrap();
+        // node 1 last seen at 0.0, timeout 5.0 ⇒ dead at t=6.
+        let dead = b.check_liveness(6.0);
+        assert_eq!(dead, vec![1]);
+        assert_eq!(b.state(1), Some(NodeState::Offline));
+        assert_eq!(b.state(0), Some(NodeState::Active));
+        // Idempotent: no double-report.
+        assert!(b.check_liveness(7.0).is_empty());
+    }
+
+    #[test]
+    fn unknown_heartbeat_rejected() {
+        let mut b = broker_with(1, 0);
+        assert!(b.heartbeat(99, 0.0).is_err());
+    }
+
+    #[test]
+    fn promote_prefers_supernode() {
+        let mut b = Broker::new(5.0);
+        let g3080 = lookup("RTX 3080").unwrap();
+        let h100 = lookup("H100").unwrap();
+        b.register(g3080, 0.5, NodeClass::Antnode, 0.0, false); // 0 active
+        let ant = b.register(h100, 0.9, NodeClass::Antnode, 0.0, true); // fast antnode
+        let sup = b.register(g3080, 0.5, NodeClass::Supernode, 0.0, true); // slow supernode
+        let picked = b.promote_backup(0).unwrap();
+        assert_eq!(picked, sup, "supernode wins over faster antnode");
+        assert_eq!(b.state(sup), Some(NodeState::Active));
+        // Next promotion takes the remaining antnode.
+        assert_eq!(b.promote_backup(0), Some(ant));
+        // Pool exhausted.
+        assert_eq!(b.promote_backup(0), None);
+    }
+
+    #[test]
+    fn submit_job_schedules_all_subtasks() {
+        let mut b = broker_with(4, 0);
+        let g = TransformerConfig::tiny().build_graph();
+        let job_id = b.submit_job(g, 8, true).unwrap();
+        let job = b.job(job_id).unwrap();
+        assert_eq!(job.tasks.len(), 8);
+        job.schedule
+            .validate(&job.tasks, &job.peer_ids.iter().map(|&id| b.info(id).unwrap().peer_spec()).collect::<Vec<_>>())
+            .unwrap();
+        // Every task maps to a real node id.
+        for k in 0..8 {
+            assert!(job.peer_ids.contains(&job.node_of_task(k)));
+        }
+    }
+
+    #[test]
+    fn failure_promotes_backup_and_moves_tasks() {
+        let mut b = broker_with(3, 1);
+        let g = TransformerConfig::tiny().build_graph();
+        let job_id = b.submit_job(g, 6, true).unwrap();
+        let victim = b.job(job_id).unwrap().node_of_task(0);
+        b.deregister(victim);
+        let moved = b.handle_failure(job_id, victim).unwrap();
+        assert!(!moved.is_empty());
+        let job = b.job(job_id).unwrap();
+        for k in 0..6 {
+            assert_ne!(job.node_of_task(k), victim, "task {k} still on failed node");
+        }
+        // Backup got activated.
+        assert!(b.backup_pool().is_empty());
+        assert!(b.events.iter().any(|e| matches!(e, Event::Promoted { .. })));
+    }
+
+    #[test]
+    fn failure_without_backup_redistributes() {
+        let mut b = broker_with(3, 0);
+        let g = TransformerConfig::tiny().build_graph();
+        let job_id = b.submit_job(g, 6, false).unwrap();
+        let victim = b.job(job_id).unwrap().node_of_task(0);
+        let moved = b.handle_failure(job_id, victim).unwrap();
+        assert!(!moved.is_empty());
+        let job = b.job(job_id).unwrap();
+        for k in 0..6 {
+            assert_ne!(job.node_of_task(k), victim);
+        }
+    }
+
+    #[test]
+    fn submit_without_nodes_fails() {
+        let mut b = Broker::new(5.0);
+        let g = TransformerConfig::tiny().build_graph();
+        assert!(b.submit_job(g, 2, false).is_err());
+    }
+
+    #[test]
+    fn event_log_records_lifecycle() {
+        let mut b = broker_with(1, 1);
+        let g = TransformerConfig::tiny().build_graph();
+        let j = b.submit_job(g, 2, false).unwrap();
+        b.deregister(0);
+        b.handle_failure(j, 0).unwrap();
+        let kinds: Vec<&str> = b
+            .events
+            .iter()
+            .map(|e| match e {
+                Event::Registered { .. } => "reg",
+                Event::Offline { .. } => "off",
+                Event::Promoted { .. } => "promo",
+                Event::JobSubmitted { .. } => "job",
+                Event::Rescheduled { .. } => "resched",
+            })
+            .collect();
+        assert_eq!(kinds, vec!["reg", "reg", "job", "off", "promo", "resched"]);
+    }
+}

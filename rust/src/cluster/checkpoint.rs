@@ -1,0 +1,154 @@
+//! Binary checkpointing of stage parameters (paper §3.5: parameters are
+//! "synchronized with the supernode in case of compnode failures"; here
+//! also the bridge from *training* to *deploying* — `serve` loads what
+//! `train` saved).
+//!
+//! Format (little-endian, versioned):
+//! ```text
+//!   magic "FAICKPT1" | u32 n_stages |
+//!   per stage: u32 name_len | name bytes | u32 n_tensors |
+//!     per tensor: u32 rank | u64 dims[rank] | f32 data[numel]
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"FAICKPT1";
+
+/// Parameters of every stage, keyed by stage name.
+pub type Checkpoint = BTreeMap<String, Vec<Tensor>>;
+
+/// Serialize a checkpoint to a file.
+pub fn save(path: &Path, ckpt: &Checkpoint) -> Result<()> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(ckpt.len() as u32).to_le_bytes());
+    for (stage, tensors) in ckpt {
+        out.extend_from_slice(&(stage.len() as u32).to_le_bytes());
+        out.extend_from_slice(stage.as_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for t in tensors {
+            let dims = t.shape();
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for &d in dims {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &v in t.f() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    // Atomic publish: write to a temp file in the same directory, then
+    // rename — concurrent readers never observe a torn checkpoint.
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, out).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a checkpoint from a file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let mut r = Reader { b: &buf, i: 0 };
+    let magic = r.take(8)?;
+    if magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let n_stages = r.u32()? as usize;
+    let mut ckpt = Checkpoint::new();
+    for _ in 0..n_stages {
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|e| anyhow!("bad stage name: {e}"))?;
+        let n_tensors = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let rank = r.u32()? as usize;
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(r.u64()? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let bytes = r.take(4 * numel)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push(Tensor::from_vec(&dims, data));
+        }
+        ckpt.insert(name, tensors);
+    }
+    Ok(ckpt)
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated checkpoint (need {n} bytes at {})", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Write a checkpoint atomically next to the artifact dir convention:
+/// `<artifacts>/<preset>/checkpoint.bin`.
+pub fn default_path(artifacts_dir: &Path) -> std::path::PathBuf {
+    artifacts_dir.join("checkpoint.bin")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(4);
+        let mut ckpt = Checkpoint::new();
+        ckpt.insert(
+            "embed".into(),
+            vec![Tensor::randn(&[16, 8], 1.0, &mut rng), Tensor::randn(&[4, 8], 1.0, &mut rng)],
+        );
+        ckpt.insert("head".into(), vec![Tensor::scalar(3.5)]);
+        let dir = std::env::temp_dir().join(format!("fa_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.bin");
+        save(&path, &ckpt).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["embed"][0], ckpt["embed"][0]);
+        assert_eq!(back["head"][0].item(), 3.5);
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let dir = std::env::temp_dir().join(format!("fa_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, &b"FAICKPT1\x01\x00\x00\x00"[..]).unwrap();
+        assert!(load(&path).is_err(), "truncated body must error");
+    }
+}

@@ -1,0 +1,20 @@
+//! The assembled decentralized cluster.
+//!
+//! * [`data`] — synthetic token corpus + the DHT-backed data provider
+//!   (paper §3.9: inputs/labels are retrieved from data providers through
+//!   the DHT);
+//! * [`sim`] — a deterministic in-process cluster over fine-grained DAGs
+//!   and the [`crate::exec::RefEngine`], with virtual-time α-β networking,
+//!   checkpoint-to-supernode and churn recovery;
+//! * [`train`] — the live pipeline trainer: one OS thread per compnode,
+//!   each owning a private PJRT runtime ([`crate::exec::XlaEngine`]),
+//!   GPipe microbatching over real channels with simulated WAN delays and
+//!   optional compression. This is the end-to-end production path.
+
+pub mod checkpoint;
+pub mod data;
+pub mod sim;
+pub mod train;
+
+pub use sim::{SimCluster, StepReport};
+pub use train::{PipelineTrainer, TrainConfig, TrainReport};

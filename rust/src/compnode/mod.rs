@@ -1,0 +1,433 @@
+//! Compnode task executor (paper §3.3, §3.6).
+//!
+//! "We employ a task executor to manage the message passing between OPs and
+//! perform the computations of the OPs with their inputs."
+//!
+//! A [`SubDagExecutor`] owns one compnode's share of a decomposed graph: it
+//! reconstructs the sub-DAG from the IR, initializes/loads the parameters of
+//! its parametric OPs, and executes **FP**, **BP** and **Update** tasks. Data
+//! that must cross compnodes is returned as outbound messages — the cluster
+//! layer (or a test) moves them and feeds the receiving executor, exactly
+//! the send-side/receive-side split of §3.6 "Message passing".
+
+use std::collections::{BTreeSet, HashMap};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dag::autodiff::BackwardPlan;
+use crate::dag::{Graph, NodeId, OpCategory};
+use crate::decompose::Decomposition;
+use crate::exec::{Engine, Optimizer};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// An outbound activation or gradient message.
+#[derive(Debug, Clone)]
+pub struct OutMsg {
+    /// The forward node whose output (FP) or arg-gradient (BP) this carries.
+    pub node: NodeId,
+    /// Destination sub-graph id.
+    pub to_sub: usize,
+    pub tensor: Tensor,
+    /// True for BP gradient messages (keyed differently on receive).
+    pub is_grad: bool,
+}
+
+/// One compnode's executor over its assigned sub-graph.
+pub struct SubDagExecutor {
+    pub sub_id: usize,
+    graph: std::sync::Arc<Graph>,
+    decomp: std::sync::Arc<Decomposition>,
+    engine: Box<dyn Engine>,
+    /// Nodes this executor owns, in topological order.
+    my_nodes: Vec<NodeId>,
+    mine: BTreeSet<NodeId>,
+    /// Parameters of owned parametric ops / variables.
+    pub params: HashMap<NodeId, Vec<Tensor>>,
+    /// Forward activations (own nodes + received outer-required data).
+    acts: HashMap<NodeId, Tensor>,
+    /// Upstream gradients accumulated per node (from local + remote users).
+    grads_in: HashMap<NodeId, Tensor>,
+    /// Parameter gradients accumulated across microbatches.
+    pub param_grads: HashMap<NodeId, Vec<Tensor>>,
+    optimizers: HashMap<NodeId, Box<dyn Optimizer>>,
+}
+
+impl SubDagExecutor {
+    /// Reconstruct sub-DAG `sub_id` and initialize its parameters.
+    pub fn new(
+        graph: std::sync::Arc<Graph>,
+        decomp: std::sync::Arc<Decomposition>,
+        sub_id: usize,
+        mut engine: Box<dyn Engine>,
+        opt_factory: &dyn Fn() -> Box<dyn Optimizer>,
+        rng: &mut Rng,
+    ) -> Result<SubDagExecutor> {
+        let topo = graph.topo_order().map_err(|e| anyhow!("{e}"))?;
+        let my_nodes: Vec<NodeId> =
+            topo.into_iter().filter(|&n| decomp.of_node[n] == sub_id).collect();
+        let mine: BTreeSet<NodeId> = my_nodes.iter().copied().collect();
+        let mut params = HashMap::new();
+        let mut optimizers = HashMap::new();
+        for &n in &my_nodes {
+            let node = graph.node(n);
+            let p = engine.init_params(node, rng)?;
+            if !p.is_empty() {
+                params.insert(n, p);
+                optimizers.insert(n, opt_factory());
+            }
+        }
+        Ok(SubDagExecutor {
+            sub_id,
+            graph,
+            decomp,
+            engine,
+            my_nodes,
+            mine,
+            params,
+            acts: HashMap::new(),
+            grads_in: HashMap::new(),
+            param_grads: HashMap::new(),
+            optimizers,
+        })
+    }
+
+    /// Feed a placeholder value or received outer-required activation.
+    pub fn feed(&mut self, node: NodeId, tensor: Tensor) {
+        self.acts.insert(node, tensor);
+    }
+
+    /// Receive a gradient message for one of our nodes.
+    pub fn receive_grad(&mut self, node: NodeId, grad: Tensor) {
+        self.accumulate_grad(node, grad);
+    }
+
+    fn accumulate_grad(&mut self, node: NodeId, grad: Tensor) {
+        match self.grads_in.get_mut(&node) {
+            Some(g) => g.axpy(1.0, &grad),
+            None => {
+                self.grads_in.insert(node, grad);
+            }
+        }
+    }
+
+    /// FP task (paper §3.6): execute owned nodes in topo order once their
+    /// inputs are available; returns messages destined for other compnodes.
+    pub fn run_fp(&mut self) -> Result<Vec<OutMsg>> {
+        let graph = self.graph.clone();
+        for &n in &self.my_nodes.clone() {
+            let node = graph.node(n);
+            if node.kind.category() == OpCategory::Placeholder {
+                if !self.acts.contains_key(&n) {
+                    bail!("placeholder '{}' was not fed", node.name);
+                }
+                continue;
+            }
+            let inputs: Vec<&Tensor> = node
+                .args
+                .iter()
+                .map(|a| {
+                    self.acts
+                        .get(a)
+                        .ok_or_else(|| anyhow!("missing input {} for '{}'", a, node.name))
+                })
+                .collect::<Result<_>>()?;
+            let params = self.params.get(&n).map(Vec::as_slice).unwrap_or(&[]);
+            let out = self.engine.forward(node, &inputs, params)?;
+            self.acts.insert(n, out);
+        }
+        // Outward data: owned nodes with external users (Table 3).
+        let mut msgs = Vec::new();
+        for &n in &self.my_nodes {
+            let mut sent_to = BTreeSet::new();
+            for &u in graph.users(n) {
+                let dst = self.decomp.of_node[u];
+                if dst != self.sub_id && sent_to.insert(dst) {
+                    msgs.push(OutMsg {
+                        node: n,
+                        to_sub: dst,
+                        tensor: self.acts[&n].clone(),
+                        is_grad: false,
+                    });
+                }
+            }
+        }
+        Ok(msgs)
+    }
+
+    /// BP task: consume accumulated upstream gradients in reverse topo
+    /// order, produce gradients for args (messaging remote ones) and
+    /// accumulate parameter gradients.
+    ///
+    /// `plan` is the global backward plan; this executor runs the portion
+    /// covering its nodes. The caller must have delivered all remote
+    /// gradient messages for the frontier nodes before invoking.
+    pub fn run_bp(&mut self, plan: &BackwardPlan) -> Result<Vec<OutMsg>> {
+        let graph = self.graph.clone();
+        let mut msgs = Vec::new();
+        for &n in plan.order.iter() {
+            if !self.mine.contains(&n) {
+                continue;
+            }
+            let task = plan.task(n).unwrap();
+            let node = graph.node(n);
+            let is_loss = node.kind.category() == OpCategory::Loss;
+            let out_grad = if is_loss {
+                None
+            } else {
+                Some(
+                    self.grads_in
+                        .remove(&n)
+                        .ok_or_else(|| anyhow!("no upstream grad for '{}'", node.name))?,
+                )
+            };
+            let inputs: Vec<&Tensor> = node
+                .args
+                .iter()
+                .map(|a| {
+                    self.acts
+                        .get(a)
+                        .ok_or_else(|| anyhow!("missing stashed input {a} for '{}'", node.name))
+                })
+                .collect::<Result<_>>()?;
+            let params = self.params.get(&n).map(Vec::as_slice).unwrap_or(&[]);
+            let bwd = self.engine.backward(node, &inputs, params, out_grad.as_ref())?;
+            // Parameter gradients accumulate (microbatching).
+            if !bwd.param_grads.is_empty() {
+                match self.param_grads.get_mut(&n) {
+                    Some(acc) => {
+                        for (a, g) in acc.iter_mut().zip(&bwd.param_grads) {
+                            a.axpy(1.0, g);
+                        }
+                    }
+                    None => {
+                        self.param_grads.insert(n, bwd.param_grads);
+                    }
+                }
+            }
+            // Route input gradients: local targets accumulate, remote ones
+            // are sent to the arg's owner (paper: "the computed gradients
+            // are returned to their Arg Nodes").
+            for (ai, g) in bwd.input_grads.into_iter().enumerate() {
+                let Some(g) = g else { continue };
+                let arg = node.args[ai];
+                if !task.grad_targets.contains(&arg) {
+                    continue;
+                }
+                let owner = self.decomp.of_node[arg];
+                if owner == self.sub_id {
+                    self.accumulate_grad(arg, g);
+                } else {
+                    msgs.push(OutMsg { node: arg, to_sub: owner, tensor: g, is_grad: true });
+                }
+            }
+        }
+        Ok(msgs)
+    }
+
+    /// Update task: apply the optimizer to every owned parametric op whose
+    /// gradient is ready, then clear gradients. Returns how many ops were
+    /// updated.
+    pub fn run_update(&mut self) -> usize {
+        let mut updated = 0;
+        for (&n, grads) in self.param_grads.iter() {
+            if let (Some(params), Some(opt)) =
+                (self.params.get_mut(&n), self.optimizers.get_mut(&n))
+            {
+                opt.step(params, grads);
+                updated += 1;
+            }
+        }
+        self.param_grads.clear();
+        updated
+    }
+
+    /// Clear per-batch state (activations + pending grads), keeping params.
+    pub fn end_batch(&mut self) {
+        self.acts.clear();
+        self.grads_in.clear();
+    }
+
+    /// The activation of an owned node (e.g. the loss).
+    pub fn activation(&self, node: NodeId) -> Option<&Tensor> {
+        self.acts.get(&node)
+    }
+
+    /// Parameter bytes hosted here (what a checkpoint to the supernode
+    /// would cost, §3.5).
+    pub fn param_bytes(&self) -> u64 {
+        self.params.values().flat_map(|v| v.iter().map(Tensor::bytes)).sum()
+    }
+
+    /// Export a deep copy of the parameter state (checkpoint).
+    pub fn checkpoint(&self) -> HashMap<NodeId, Vec<Tensor>> {
+        self.params.clone()
+    }
+
+    /// Restore parameters from a checkpoint (backup-node takeover).
+    pub fn restore(&mut self, ckpt: HashMap<NodeId, Vec<Tensor>>) {
+        self.params = ckpt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::autodiff::backward_plan;
+    use crate::exec::{Adam, RefEngine};
+    use crate::models::fig3;
+    use std::sync::Arc;
+
+    /// Wire 3 executors over the paper's Figure-3 partition and run a full
+    /// FP→BP→Update cycle, moving messages by hand.
+    fn fig3_cluster() -> (Arc<Graph>, Arc<Decomposition>, Vec<SubDagExecutor>) {
+        let g = Arc::new(fig3::build());
+        let d = Arc::new(Decomposition::from_assignment(&g, &fig3::paper_partition(&g)));
+        let mut rng = Rng::new(42);
+        let execs: Vec<SubDagExecutor> = (0..3)
+            .map(|s| {
+                SubDagExecutor::new(
+                    g.clone(),
+                    d.clone(),
+                    s,
+                    Box::new(RefEngine::new()),
+                    &|| Box::new(Adam::new(0.02)),
+                    &mut rng,
+                )
+                .unwrap()
+            })
+            .collect();
+        (g, d, execs)
+    }
+
+    fn feed_fig3(g: &Graph, execs: &mut [SubDagExecutor], seed: u64) {
+        let mut rng = Rng::new(seed);
+        let input = Tensor::randn(&[fig3::BATCH, fig3::CH, fig3::HW, fig3::HW], 1.0, &mut rng);
+        let n_lab = fig3::BATCH * 2 * fig3::CH * fig3::HW;
+        let labels = Tensor::from_ivec(
+            &[fig3::BATCH, 2 * fig3::CH, fig3::HW],
+            (0..n_lab).map(|i| (i % fig3::CLASSES) as i32).collect(),
+        );
+        execs[0].feed(g.by_name("Input").unwrap().id, input);
+        execs[2].feed(g.by_name("Label").unwrap().id, labels);
+    }
+
+    /// One FP sweep across sub-DAGs in order, delivering messages.
+    fn run_fp_all(execs: &mut [SubDagExecutor]) -> Result<()> {
+        for s in 0..execs.len() {
+            let msgs = execs[s].run_fp()?;
+            for m in msgs {
+                assert!(!m.is_grad);
+                execs[m.to_sub].feed(m.node, m.tensor);
+            }
+        }
+        Ok(())
+    }
+
+    fn run_bp_all(execs: &mut [SubDagExecutor], plan: &BackwardPlan) -> Result<()> {
+        for s in (0..execs.len()).rev() {
+            let msgs = execs[s].run_bp(plan)?;
+            for m in msgs {
+                assert!(m.is_grad);
+                execs[m.to_sub].receive_grad(m.node, m.tensor);
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn fp_produces_loss_on_compnode3() {
+        let (g, _, mut execs) = fig3_cluster();
+        feed_fig3(&g, &mut execs, 1);
+        run_fp_all(&mut execs).unwrap();
+        let loss_id = g.by_name("CrossEntropy").unwrap().id;
+        let loss = execs[2].activation(loss_id).unwrap().item();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn fp_message_pattern_matches_table3() {
+        let (g, _, mut execs) = fig3_cluster();
+        feed_fig3(&g, &mut execs, 2);
+        let m0 = execs[0].run_fp().unwrap();
+        // Subgraph 1 sends Add→sub2 and Pool→sub3.
+        let mut sends: Vec<(String, usize)> =
+            m0.iter().map(|m| (g.node(m.node).name.clone(), m.to_sub)).collect();
+        sends.sort();
+        assert_eq!(sends, vec![("Add".to_string(), 1), ("Pool".to_string(), 2)]);
+        for m in m0 {
+            execs[m.to_sub].feed(m.node, m.tensor);
+        }
+        let m1 = execs[1].run_fp().unwrap();
+        assert_eq!(m1.len(), 1);
+        assert_eq!(g.node(m1[0].node).name, "Multiply");
+        assert_eq!(m1[0].to_sub, 2);
+        for m in m1 {
+            execs[m.to_sub].feed(m.node, m.tensor);
+        }
+        assert!(execs[2].run_fp().unwrap().is_empty());
+    }
+
+    #[test]
+    fn full_training_cycle_reduces_loss() {
+        let (g, _, mut execs) = fig3_cluster();
+        let plan = backward_plan(&g);
+        let loss_id = g.by_name("CrossEntropy").unwrap().id;
+        let mut losses = Vec::new();
+        for step in 0..30 {
+            // Same data every step: loss must drop.
+            feed_fig3(&g, &mut execs, 7);
+            run_fp_all(&mut execs).unwrap();
+            losses.push(execs[2].activation(loss_id).unwrap().item());
+            run_bp_all(&mut execs, &plan).unwrap();
+            let updated: usize = execs.iter_mut().map(|e| e.run_update()).sum();
+            // Conv (sub1), Tensor A (sub2), Linear (sub3).
+            assert_eq!(updated, 3, "step {step}");
+            for e in execs.iter_mut() {
+                e.end_batch();
+            }
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.8),
+            "loss did not drop: {:?}",
+            &losses
+        );
+    }
+
+    #[test]
+    fn bp_routes_gradients_to_remote_arg_owners() {
+        let (g, _, mut execs) = fig3_cluster();
+        let plan = backward_plan(&g);
+        feed_fig3(&g, &mut execs, 3);
+        run_fp_all(&mut execs).unwrap();
+        // Sub 3 backward must send grads to Pool (sub1) and Multiply (sub2).
+        let msgs = execs[2].run_bp(&plan).unwrap();
+        let mut dests: Vec<(String, usize)> =
+            msgs.iter().map(|m| (g.node(m.node).name.clone(), m.to_sub)).collect();
+        dests.sort();
+        assert_eq!(dests, vec![("Multiply".to_string(), 1), ("Pool".to_string(), 0)]);
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let (g, _, mut execs) = fig3_cluster();
+        let plan = backward_plan(&g);
+        feed_fig3(&g, &mut execs, 4);
+        run_fp_all(&mut execs).unwrap();
+        run_bp_all(&mut execs, &plan).unwrap();
+        let ckpt = execs[0].checkpoint();
+        execs[0].run_update();
+        let conv = g.by_name("Conv").unwrap().id;
+        let after = execs[0].params[&conv][0].clone();
+        execs[0].restore(ckpt);
+        let restored = &execs[0].params[&conv][0];
+        assert_ne!(after.f(), restored.f(), "update must have changed params");
+    }
+
+    #[test]
+    fn missing_feed_is_reported() {
+        let (_, _, mut execs) = fig3_cluster();
+        let err = execs[0].run_fp().unwrap_err().to_string();
+        assert!(err.contains("Input"), "got: {err}");
+    }
+}

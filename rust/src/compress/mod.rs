@@ -1,0 +1,245 @@
+//! Communication compression (paper §2.3).
+//!
+//! "To reduce the large communication time caused by the extremely low
+//! communication bandwidth […] FusionAI incorporates these techniques and
+//! conducts scheduling with them." We implement the two data-plane codecs
+//! the paper names — **quantization** (int8, symmetric per-tensor) and
+//! **top-k sparsification** — behind a single [`Codec`] enum used by the
+//! cluster message layer, plus a [`LocalSgdPolicy`] helper implementing the
+//! reduced-synchronization schedule (Local-SGD) for parameter traffic.
+//!
+//! Codecs are *lossy on values, lossless on shape*: `decode(encode(x))`
+//! yields a tensor of identical shape with bounded (quantization) or
+//! structured (top-k) error. Error bounds are property-tested.
+
+/// Wire codec for f32 tensors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Codec {
+    /// Raw little-endian f32.
+    None,
+    /// Symmetric per-tensor int8 quantization (4× smaller).
+    Int8,
+    /// Keep the `k = ceil(ratio·n)` largest-magnitude entries as
+    /// (index, value) pairs. `ratio ∈ (0, 1]`.
+    TopK { ratio: f64 },
+}
+
+impl Codec {
+    /// Encode `data` into wire bytes.
+    pub fn encode(&self, data: &[f32]) -> Vec<u8> {
+        match *self {
+            Codec::None => {
+                let mut out = Vec::with_capacity(4 * data.len());
+                for &x in data {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                out
+            }
+            Codec::Int8 => {
+                let (q, scale) = quantize_int8(data);
+                let mut out = Vec::with_capacity(4 + q.len());
+                out.extend_from_slice(&scale.to_le_bytes());
+                out.extend(q.iter().map(|&v| v as u8));
+                out
+            }
+            Codec::TopK { ratio } => {
+                let kept = topk(data, ratio);
+                let mut out = Vec::with_capacity(4 + 8 * kept.len());
+                out.extend_from_slice(&(kept.len() as u32).to_le_bytes());
+                for (i, v) in kept {
+                    out.extend_from_slice(&(i as u32).to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    /// Decode wire bytes back into `n` f32 values.
+    pub fn decode(&self, bytes: &[u8], n: usize) -> Vec<f32> {
+        match *self {
+            Codec::None => {
+                assert_eq!(bytes.len(), 4 * n, "raw payload size mismatch");
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+            }
+            Codec::Int8 => {
+                assert_eq!(bytes.len(), 4 + n, "int8 payload size mismatch");
+                let scale = f32::from_le_bytes(bytes[..4].try_into().unwrap());
+                bytes[4..].iter().map(|&b| (b as i8) as f32 * scale).collect()
+            }
+            Codec::TopK { .. } => {
+                let k = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+                assert_eq!(bytes.len(), 4 + 8 * k, "topk payload size mismatch");
+                let mut out = vec![0.0f32; n];
+                for c in bytes[4..].chunks_exact(8) {
+                    let i = u32::from_le_bytes(c[..4].try_into().unwrap()) as usize;
+                    let v = f32::from_le_bytes(c[4..].try_into().unwrap());
+                    out[i] = v;
+                }
+                out
+            }
+        }
+    }
+
+    /// Wire size in bytes for an n-element tensor (for the perf model: this
+    /// is the `M` that enters `T_comm = α + β·M`).
+    pub fn wire_bytes(&self, n: usize) -> u64 {
+        match *self {
+            Codec::None => 4 * n as u64,
+            Codec::Int8 => 4 + n as u64,
+            Codec::TopK { ratio } => {
+                let k = ((ratio * n as f64).ceil() as u64).max(1).min(n as u64);
+                4 + 8 * k
+            }
+        }
+    }
+
+    /// Compression ratio vs raw f32.
+    pub fn ratio(&self, n: usize) -> f64 {
+        self.wire_bytes(n) as f64 / (4.0 * n as f64)
+    }
+}
+
+/// Symmetric per-tensor int8 quantization: `q = round(x / scale)` with
+/// `scale = max|x| / 127`. Returns `(q, scale)`.
+pub fn quantize_int8(data: &[f32]) -> (Vec<i8>, f32) {
+    let amax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if amax == 0.0 {
+        return (vec![0; data.len()], 1.0);
+    }
+    let scale = amax / 127.0;
+    let q = data.iter().map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8).collect();
+    (q, scale)
+}
+
+/// Indices and values of the k largest-magnitude entries,
+/// `k = max(1, ceil(ratio·n))`.
+pub fn topk(data: &[f32], ratio: f64) -> Vec<(usize, f32)> {
+    let n = data.len();
+    if n == 0 {
+        return vec![];
+    }
+    let k = ((ratio * n as f64).ceil() as usize).clamp(1, n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    // Partial selection: k-th largest magnitude.
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        data[b].abs().partial_cmp(&data[a].abs()).unwrap()
+    });
+    let mut kept: Vec<(usize, f32)> = idx[..k].iter().map(|&i| (i, data[i])).collect();
+    kept.sort_by_key(|&(i, _)| i);
+    kept
+}
+
+/// Local-SGD synchronization policy (paper §2.3 "Local-SGD permits flexible
+/// communication frequencies"): sync parameters every `period` local steps.
+#[derive(Debug, Clone)]
+pub struct LocalSgdPolicy {
+    pub period: usize,
+    step: usize,
+}
+
+impl LocalSgdPolicy {
+    pub fn every(period: usize) -> LocalSgdPolicy {
+        LocalSgdPolicy { period: period.max(1), step: 0 }
+    }
+
+    /// Advance one local step; returns true when this step must synchronize.
+    pub fn tick(&mut self) -> bool {
+        self.step += 1;
+        self.step % self.period == 0
+    }
+
+    /// Fraction of sync rounds vs fully-synchronous SGD.
+    pub fn comm_fraction(&self) -> f64 {
+        1.0 / self.period as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn raw_roundtrip_exact() {
+        let x = random_vec(257, 1);
+        let c = Codec::None;
+        assert_eq!(c.decode(&c.encode(&x), x.len()), x);
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_scale() {
+        let x = random_vec(4096, 2);
+        let c = Codec::Int8;
+        let y = c.decode(&c.encode(&x), x.len());
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let bound = amax / 127.0 / 2.0 + 1e-6;
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int8_wire_size() {
+        let x = random_vec(1000, 3);
+        assert_eq!(Codec::Int8.encode(&x).len() as u64, Codec::Int8.wire_bytes(1000));
+        assert!(Codec::Int8.ratio(1000) < 0.26);
+    }
+
+    #[test]
+    fn int8_zeros_safe() {
+        let x = vec![0.0f32; 16];
+        let c = Codec::Int8;
+        assert_eq!(c.decode(&c.encode(&x), 16), x);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let x = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let kept = topk(&x, 0.4); // k = 2
+        assert_eq!(kept.len(), 2);
+        let idxs: Vec<usize> = kept.iter().map(|&(i, _)| i).collect();
+        assert_eq!(idxs, vec![1, 3]);
+    }
+
+    #[test]
+    fn topk_roundtrip_preserves_selected() {
+        let x = random_vec(512, 4);
+        let c = Codec::TopK { ratio: 0.1 };
+        let y = c.decode(&c.encode(&x), x.len());
+        let kept = topk(&x, 0.1);
+        for (i, v) in kept {
+            assert_eq!(y[i], v);
+        }
+        // Everything else zeroed.
+        let nonzero = y.iter().filter(|&&v| v != 0.0).count();
+        assert!(nonzero <= 52);
+    }
+
+    #[test]
+    fn topk_ratio_one_is_lossless() {
+        let x = random_vec(100, 5);
+        let c = Codec::TopK { ratio: 1.0 };
+        assert_eq!(c.decode(&c.encode(&x), 100), x);
+    }
+
+    #[test]
+    fn wire_bytes_monotone_in_ratio() {
+        assert!(Codec::TopK { ratio: 0.01 }.wire_bytes(10_000)
+            < Codec::TopK { ratio: 0.5 }.wire_bytes(10_000));
+        assert!(Codec::TopK { ratio: 0.05 }.ratio(10_000) < 0.11);
+    }
+
+    #[test]
+    fn local_sgd_schedule() {
+        let mut p = LocalSgdPolicy::every(4);
+        let syncs: Vec<bool> = (0..8).map(|_| p.tick()).collect();
+        assert_eq!(syncs, vec![false, false, false, true, false, false, false, true]);
+        assert_eq!(p.comm_fraction(), 0.25);
+    }
+}

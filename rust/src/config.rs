@@ -1,0 +1,275 @@
+//! Job / fleet configuration: a TOML-subset parser and the typed configs
+//! the CLI and examples consume.
+//!
+//! The paper's broker receives a "job definition file" (§3.2); ours is TOML:
+//!
+//! ```toml
+//! [job]
+//! model = "bert-large"       # or gpt3-24x4096 / gpt-e2e / gpt-tiny
+//! batches = 512
+//! training = false
+//!
+//! [network]
+//! bandwidth_mbps = 100.0
+//! latency_ms = 10.0
+//!
+//! [[fleet]]
+//! gpu = "RTX 3080"
+//! count = 50
+//! lambda = 0.5
+//!
+//! [[fleet]]
+//! gpu = "H100"
+//! count = 0
+//! lambda = 0.5
+//! ```
+//!
+//! Supported TOML subset: `[section]`, `[[array-of-tables]]`,
+//! `key = value` with string/float/int/bool values, `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::models::transformer::TransformerConfig;
+use crate::perf::comm::LinkModel;
+use crate::perf::gpus::{lookup, GpuSpec};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` (or one element of a `[[section]]` list).
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// Parsed document: plain sections + array-of-table sections.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, TomlTable>,
+    pub arrays: BTreeMap<String, Vec<TomlTable>>,
+}
+
+/// Parse the TOML subset.
+pub fn parse_toml(src: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    enum Cur {
+        None,
+        Table(String),
+        Array(String),
+    }
+    let mut cur = Cur::None;
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim().to_string();
+            doc.arrays.entry(name.clone()).or_default().push(TomlTable::new());
+            cur = Cur::Array(name);
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            doc.tables.entry(name.clone()).or_default();
+            cur = Cur::Table(name);
+        } else if let Some(eq) = line.find('=') {
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .ok_or_else(|| anyhow!("line {}: bad value '{line}'", lineno + 1))?;
+            let table = match &cur {
+                Cur::None => bail!("line {}: key before any section", lineno + 1),
+                Cur::Table(name) => doc.tables.get_mut(name).unwrap(),
+                Cur::Array(name) => doc.arrays.get_mut(name).unwrap().last_mut().unwrap(),
+            };
+            table.insert(key, val);
+        } else {
+            bail!("line {}: cannot parse '{line}'", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Some(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>().ok().map(TomlValue::Num)
+}
+
+/// One fleet entry: `count` devices of one GPU model.
+#[derive(Debug, Clone)]
+pub struct FleetEntry {
+    pub gpu: GpuSpec,
+    pub count: usize,
+    pub lambda: f64,
+}
+
+/// The typed experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub model: TransformerConfig,
+    pub batches: usize,
+    pub training: bool,
+    pub link: LinkModel,
+    pub fleet: Vec<FleetEntry>,
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(src: &str) -> Result<ExperimentConfig> {
+        let doc = parse_toml(src)?;
+        let job = doc.tables.get("job").ok_or_else(|| anyhow!("missing [job]"))?;
+        let model_name = job
+            .get("model")
+            .and_then(TomlValue::as_str)
+            .ok_or_else(|| anyhow!("[job] needs model"))?;
+        let model = model_by_name(model_name)?;
+        let batches =
+            job.get("batches").and_then(TomlValue::as_f64).unwrap_or(512.0) as usize;
+        let training = job.get("training").and_then(TomlValue::as_bool).unwrap_or(false);
+        let net = doc.tables.get("network");
+        let bw = net
+            .and_then(|t| t.get("bandwidth_mbps"))
+            .and_then(TomlValue::as_f64)
+            .unwrap_or(100.0);
+        let lat =
+            net.and_then(|t| t.get("latency_ms")).and_then(TomlValue::as_f64).unwrap_or(10.0);
+        let mut fleet = Vec::new();
+        for entry in doc.arrays.get("fleet").map(Vec::as_slice).unwrap_or(&[]) {
+            let name = entry
+                .get("gpu")
+                .and_then(TomlValue::as_str)
+                .ok_or_else(|| anyhow!("[[fleet]] needs gpu"))?;
+            let gpu = lookup(name).ok_or_else(|| anyhow!("unknown GPU '{name}'"))?.clone();
+            let count =
+                entry.get("count").and_then(TomlValue::as_f64).unwrap_or(1.0) as usize;
+            let lambda = entry.get("lambda").and_then(TomlValue::as_f64).unwrap_or(0.5);
+            if count > 0 {
+                fleet.push(FleetEntry { gpu, count, lambda });
+            }
+        }
+        if fleet.is_empty() {
+            bail!("config declares no fleet devices");
+        }
+        Ok(ExperimentConfig {
+            model,
+            batches,
+            training,
+            link: LinkModel::from_ms_mbps(lat, bw),
+            fleet,
+        })
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.fleet.iter().map(|f| f.count).sum()
+    }
+}
+
+/// Resolve a model preset by name.
+pub fn model_by_name(name: &str) -> Result<TransformerConfig> {
+    Ok(match name {
+        "bert-large" => TransformerConfig::bert_large(),
+        "gpt3-24x4096" => TransformerConfig::gpt3_24x4096(),
+        "gpt-e2e" => TransformerConfig::gpt_e2e(),
+        "gpt-tiny" => TransformerConfig::tiny(),
+        other => bail!("unknown model preset '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# the paper's headline comparison
+[job]
+model = "bert-large"
+batches = 512
+training = false
+
+[network]
+bandwidth_mbps = 1000.0
+latency_ms = 5.0
+
+[[fleet]]
+gpu = "RTX 3080"
+count = 50
+lambda = 0.5
+
+[[fleet]]
+gpu = "H100"
+count = 4
+lambda = 0.5
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(c.model.name, "bert-large");
+        assert_eq!(c.batches, 512);
+        assert!(!c.training);
+        assert_eq!(c.fleet.len(), 2);
+        assert_eq!(c.total_devices(), 54);
+        assert!((c.link.alpha - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_subset_features() {
+        let doc = parse_toml(
+            "[a]\nx = 1.5 # comment\ny = \"s\"\nz = true\n[[b]]\nk = 1\n[[b]]\nk = 2\n",
+        )
+        .unwrap();
+        assert_eq!(doc.tables["a"]["x"], TomlValue::Num(1.5));
+        assert_eq!(doc.tables["a"]["y"], TomlValue::Str("s".into()));
+        assert_eq!(doc.tables["a"]["z"], TomlValue::Bool(true));
+        assert_eq!(doc.arrays["b"].len(), 2);
+        assert_eq!(doc.arrays["b"][1]["k"], TomlValue::Num(2.0));
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(parse_toml("x = 1").is_err()); // key before section
+        assert!(parse_toml("[a]\nx =").is_err());
+        let bad = "[job]\nmodel = \"nope\"\n[[fleet]]\ngpu = \"RTX 3080\"\ncount = 1";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        let nofleet = "[job]\nmodel = \"gpt-tiny\"";
+        assert!(ExperimentConfig::from_toml(nofleet).is_err());
+    }
+
+    #[test]
+    fn model_presets_resolve() {
+        for name in ["bert-large", "gpt3-24x4096", "gpt-e2e", "gpt-tiny"] {
+            assert!(model_by_name(name).is_ok());
+        }
+        assert!(model_by_name("llama").is_err());
+    }
+}

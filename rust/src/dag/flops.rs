@@ -1,0 +1,217 @@
+//! Per-operator cost accounting: FLOPs, parameter counts and memory
+//! footprints.
+//!
+//! These feed the PALEO-style analytic performance model (paper §3.7,
+//! `C(f,p) = FLOPs(f)/S(p)`) and the memory constraints of the scheduling
+//! problem (Eq. 2: `D_gpu(G_Sk)`, `D_cpu(G_Sk)`, `D_disk(G_Sk)`).
+//!
+//! Conventions (standard in the performance-modeling literature, e.g. PALEO):
+//! * a multiply-accumulate counts as 2 FLOPs;
+//! * backward pass ≈ 2× forward FLOPs for parametric ops (grad wrt inputs +
+//!   grad wrt weights), ≈ 1× for non-parametric ops;
+//! * attention FLOPs include the `S²` score/value terms.
+
+use super::{Node, OpKind, Shape};
+
+/// Number of trainable parameters owned by the node.
+pub fn param_count(node: &Node) -> usize {
+    use OpKind::*;
+    match &node.kind {
+        Conv2d { in_ch, out_ch, kernel, .. } => out_ch * in_ch * kernel * kernel + out_ch,
+        Linear { in_features, out_features, bias } => {
+            in_features * out_features + if *bias { *out_features } else { 0 }
+        }
+        Embedding { vocab, dim } => vocab * dim,
+        LayerNorm { dim } => 2 * dim,
+        // QKV projections + output projection.
+        Attention { dim, .. } => 4 * dim * dim + 4 * dim,
+        FeedForward { dim, hidden } => dim * hidden + hidden + hidden * dim + dim,
+        Variable => node.out_shape.numel(),
+        StageCall { param_count, .. } => *param_count,
+        _ => 0,
+    }
+}
+
+/// Bytes of parameter storage (f32).
+pub fn param_bytes(node: &Node) -> u64 {
+    if let OpKind::StageCall { param_bytes, .. } = &node.kind {
+        return *param_bytes;
+    }
+    param_count(node) as u64 * 4
+}
+
+/// Forward-pass FLOPs of the node for its inferred shapes.
+pub fn fwd_flops(node: &Node) -> f64 {
+    use OpKind::*;
+    let out = node.out_shape.numel() as f64;
+    match &node.kind {
+        Placeholder | Variable => 0.0,
+        Conv2d { in_ch, kernel, .. } => {
+            // out elements × (2 · in_ch · k²) MAC-derived FLOPs
+            out * 2.0 * (*in_ch as f64) * (*kernel as f64) * (*kernel as f64)
+        }
+        Linear { in_features, out_features, bias } => {
+            let rows = out / *out_features as f64;
+            let mut f = rows * 2.0 * (*in_features as f64) * (*out_features as f64);
+            if *bias {
+                f += out;
+            }
+            f
+        }
+        Embedding { .. } => out, // gather ≈ 1 op/element copied
+        LayerNorm { .. } => 8.0 * out,
+        Attention { dim, .. } => attention_flops(&node.out_shape, *dim),
+        FeedForward { dim, hidden } => {
+            let tokens = out / *dim as f64;
+            // two matmuls + gelu
+            tokens * 2.0 * (*dim as f64) * (*hidden as f64) * 2.0 + tokens * (*hidden as f64) * 8.0
+        }
+        Add | Multiply | Relu => out,
+        Gelu => 8.0 * out,
+        Softmax => 5.0 * out,
+        MaxPool2d { kernel, .. } => out * (*kernel as f64) * (*kernel as f64),
+        Concat { .. } => out, // memory movement, count as 1/elt
+        CrossEntropy { .. } | MseLoss => 5.0 * out.max(1.0),
+        StageCall { flops, .. } => *flops,
+    }
+}
+
+/// `[B, S, D]` self-attention FLOPs: QKV + scores + context + out-proj.
+fn attention_flops(shape: &Shape, dim: usize) -> f64 {
+    let d = shape.dims();
+    let (b, s) = (d[0] as f64, d[1] as f64);
+    let dm = dim as f64;
+    let proj = 4.0 * b * s * 2.0 * dm * dm; // Q,K,V,O projections
+    let scores = b * s * s * 2.0 * dm; // QKᵀ
+    let context = b * s * s * 2.0 * dm; // attn·V
+    let softmax = b * s * s * 5.0;
+    proj + scores + context + softmax
+}
+
+/// Backward-pass FLOPs (0 for leaves that don't require grad).
+pub fn bwd_flops(node: &Node) -> f64 {
+    use super::OpCategory::*;
+    match node.kind.category() {
+        Placeholder => 0.0,
+        Variable => 0.0, // grad arrives from users; no local compute
+        Parametric | Loss => 2.0 * fwd_flops(node),
+        NonParametric => fwd_flops(node),
+    }
+}
+
+/// Bytes of the node's output activation.
+pub fn activation_bytes(node: &Node) -> u64 {
+    node.out_shape.bytes(node.out_dtype) as u64
+}
+
+/// GPU memory required to *execute* the node during training:
+/// parameters + gradients + output activation + a working-set factor for the
+/// op itself. This instantiates `D_gpu(G_Sk)` of Eq. 2 at node granularity.
+pub fn gpu_bytes_train(node: &Node) -> u64 {
+    let p = param_bytes(node);
+    // params + grads + Adam m/v states
+    4 * p + 2 * activation_bytes(node)
+}
+
+/// GPU memory for inference only (params + activation).
+pub fn gpu_bytes_infer(node: &Node) -> u64 {
+    param_bytes(node) + activation_bytes(node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DType, Graph, OpKind, Shape};
+
+    #[test]
+    fn linear_flops_and_params() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[4, 128]), DType::F32);
+        let l = g
+            .op("fc", OpKind::Linear { in_features: 128, out_features: 256, bias: true }, &[x])
+            .unwrap();
+        let n = g.node(l);
+        assert_eq!(param_count(n), 128 * 256 + 256);
+        // 4 rows × 2·128·256 + bias adds
+        assert_eq!(fwd_flops(n), 4.0 * 2.0 * 128.0 * 256.0 + 4.0 * 256.0);
+        assert_eq!(bwd_flops(n), 2.0 * fwd_flops(n));
+    }
+
+    #[test]
+    fn conv_flops() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[1, 3, 8, 8]), DType::F32);
+        let c = g
+            .op(
+                "conv",
+                OpKind::Conv2d { in_ch: 3, out_ch: 4, kernel: 3, stride: 1, padding: 1 },
+                &[x],
+            )
+            .unwrap();
+        let n = g.node(c);
+        assert_eq!(param_count(n), 4 * 3 * 9 + 4);
+        let out_elems = (1 * 4 * 8 * 8) as f64;
+        assert_eq!(fwd_flops(n), out_elems * 2.0 * 3.0 * 9.0);
+    }
+
+    #[test]
+    fn attention_flops_quadratic_in_seq() {
+        let mut g = Graph::new();
+        let x1 = g.placeholder("x1", Shape::of(&[1, 64, 128]), DType::F32);
+        let x2 = g.placeholder("x2", Shape::of(&[1, 128, 128]), DType::F32);
+        let a1 =
+            g.op("attn1", OpKind::Attention { heads: 4, dim: 128, causal: true }, &[x1]).unwrap();
+        let a2 =
+            g.op("attn2", OpKind::Attention { heads: 4, dim: 128, causal: true }, &[x2]).unwrap();
+        let f1 = fwd_flops(g.node(a1));
+        let f2 = fwd_flops(g.node(a2));
+        // Doubling S more than doubles FLOPs (quadratic score term).
+        assert!(f2 > 2.0 * f1);
+    }
+
+    #[test]
+    fn leaves_cost_nothing() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[10]), DType::F32);
+        assert_eq!(fwd_flops(g.node(x)), 0.0);
+        assert_eq!(bwd_flops(g.node(x)), 0.0);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[4, 128]), DType::F32);
+        let l = g
+            .op("fc", OpKind::Linear { in_features: 128, out_features: 128, bias: false }, &[x])
+            .unwrap();
+        let n = g.node(l);
+        let p = (128 * 128 * 4) as u64;
+        let act = (4 * 128 * 4) as u64;
+        assert_eq!(param_bytes(n), p);
+        assert_eq!(activation_bytes(n), act);
+        assert_eq!(gpu_bytes_train(n), 4 * p + 2 * act);
+        assert_eq!(gpu_bytes_infer(n), p + act);
+    }
+
+    #[test]
+    fn stagecall_uses_declared_costs() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 8, 16]), DType::F32);
+        let s = g
+            .op(
+                "stage0",
+                OpKind::StageCall {
+                    stage: "block".into(),
+                    param_count: 1000,
+                    flops: 5e6,
+                    param_bytes: 4000,
+                },
+                &[x],
+            )
+            .unwrap();
+        let n = g.node(s);
+        assert_eq!(param_count(n), 1000);
+        assert_eq!(fwd_flops(n), 5e6);
+        assert_eq!(param_bytes(n), 4000);
+    }
+}

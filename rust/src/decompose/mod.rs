@@ -1,0 +1,382 @@
+//! DAG decomposition into sub-DAGs (paper §3.5, Tables 2–3).
+//!
+//! "The original complete DAG can be decomposed into sub-DAGs to be
+//! reconstructed and executed on different compnodes according to the
+//! scheduling." A [`Decomposition`] assigns every node to exactly one
+//! sub-graph and derives the Table-3 attributes the executor uses for
+//! message passing:
+//!
+//! * **Inner required data** — producer nodes inside the sub-graph;
+//! * **Outer required data** — nodes on *other* compnodes whose outputs this
+//!   sub-graph consumes (activations that must arrive over the network);
+//! * **Outwards data** — local nodes whose outputs other compnodes consume;
+//! * **Compnode users** — the set of downstream sub-graphs.
+
+use std::collections::BTreeSet;
+
+use crate::dag::{flops, Graph, NodeId};
+
+/// One sub-DAG (task unit `G_Sk` of the paper).
+#[derive(Debug, Clone)]
+pub struct SubGraph {
+    pub id: usize,
+    /// Node ids of the original graph belonging to this sub-graph.
+    pub nodes: Vec<NodeId>,
+}
+
+/// A full partition of a graph's nodes into sub-DAGs.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    pub subgraphs: Vec<SubGraph>,
+    /// node id → subgraph id.
+    pub of_node: Vec<usize>,
+}
+
+/// Table-3 row for one sub-graph.
+#[derive(Debug, Clone)]
+pub struct SubGraphAttrs {
+    pub subgraph: usize,
+    pub inner_required: Vec<NodeId>,
+    pub outer_required: Vec<NodeId>,
+    pub outwards: Vec<NodeId>,
+    pub compnode_users: Vec<usize>,
+}
+
+impl Decomposition {
+    /// Build from an explicit node→subgraph assignment (ids may be sparse;
+    /// they are compacted preserving order of first appearance).
+    pub fn from_assignment(g: &Graph, assign: &[(NodeId, usize)]) -> Decomposition {
+        assert_eq!(assign.len(), g.len(), "assignment must cover every node");
+        let mut ids: Vec<usize> = Vec::new();
+        let mut of_node = vec![usize::MAX; g.len()];
+        for &(n, raw) in assign {
+            let compact = match ids.iter().position(|&r| r == raw) {
+                Some(i) => i,
+                None => {
+                    ids.push(raw);
+                    ids.len() - 1
+                }
+            };
+            of_node[n] = compact;
+        }
+        let mut subgraphs: Vec<SubGraph> =
+            (0..ids.len()).map(|id| SubGraph { id, nodes: vec![] }).collect();
+        for n in 0..g.len() {
+            subgraphs[of_node[n]].nodes.push(n);
+        }
+        Decomposition { subgraphs, of_node }
+    }
+
+    /// Contiguous topological split into `k` parts, balancing forward FLOPs.
+    ///
+    /// This is the pipeline-parallel decomposition of §4 ("sub-DAGs are
+    /// sequentially executed"): nodes are laid out in topological order and
+    /// cut into `k` contiguous segments minimizing the maximum segment
+    /// weight (exact O(n²k) dynamic program).
+    pub fn chain_balanced(g: &Graph, k: usize) -> Decomposition {
+        let order = g.topo_order().expect("acyclic");
+        let w: Vec<f64> = order.iter().map(|&n| flops::fwd_flops(g.node(n))).collect();
+        let cuts = min_max_contiguous(&w, k);
+        let mut assign = vec![0usize; g.len()];
+        for (seg, window) in cuts.iter().enumerate() {
+            for &pos in window {
+                assign[order[pos]] = seg;
+            }
+        }
+        let pairs: Vec<(NodeId, usize)> = (0..g.len()).map(|n| (n, assign[n])).collect();
+        Decomposition::from_assignment(g, &pairs)
+    }
+
+    /// Contiguous topological split balanced **proportionally to device
+    /// speeds** (heterogeneous pipeline): segment i's weight should be
+    /// ≈ total · speed_i / Σspeed.
+    pub fn chain_proportional(g: &Graph, speeds: &[f64]) -> Decomposition {
+        let order = g.topo_order().expect("acyclic");
+        let w: Vec<f64> = order.iter().map(|&n| flops::fwd_flops(g.node(n))).collect();
+        let segs = proportional_contiguous(&w, speeds);
+        let mut assign = vec![0usize; g.len()];
+        for (seg, window) in segs.iter().enumerate() {
+            for &pos in window {
+                assign[order[pos]] = seg;
+            }
+        }
+        let pairs: Vec<(NodeId, usize)> = (0..g.len()).map(|n| (n, assign[n])).collect();
+        Decomposition::from_assignment(g, &pairs)
+    }
+
+    pub fn num_subgraphs(&self) -> usize {
+        self.subgraphs.len()
+    }
+
+    /// Edges of the original DAG that cross sub-graph boundaries — exactly
+    /// the messages that consume communication resources ("black lines" in
+    /// Figure 3).
+    pub fn cut_edges(&self, g: &Graph) -> Vec<(NodeId, NodeId)> {
+        let mut cuts = Vec::new();
+        for node in &g.nodes {
+            for &a in &node.args {
+                if self.of_node[a] != self.of_node[node.id] {
+                    cuts.push((a, node.id));
+                }
+            }
+        }
+        cuts
+    }
+
+    /// Bytes flowing over each cut edge (the activation of the source node).
+    pub fn cut_bytes(&self, g: &Graph) -> u64 {
+        self.cut_edges(g)
+            .iter()
+            .map(|&(src, _)| flops::activation_bytes(g.node(src)))
+            .sum()
+    }
+
+    /// Table-3 attributes for one sub-graph.
+    pub fn attrs(&self, g: &Graph, sub: usize) -> SubGraphAttrs {
+        let mut inner = BTreeSet::new();
+        let mut outer = BTreeSet::new();
+        let mut outwards = BTreeSet::new();
+        let mut users = BTreeSet::new();
+        for &n in &self.subgraphs[sub].nodes {
+            for &a in &g.node(n).args {
+                if self.of_node[a] == sub {
+                    inner.insert(a);
+                } else {
+                    outer.insert(a);
+                }
+            }
+            for &u in g.users(n) {
+                if self.of_node[u] != sub {
+                    outwards.insert(n);
+                    users.insert(self.of_node[u]);
+                }
+            }
+        }
+        SubGraphAttrs {
+            subgraph: sub,
+            inner_required: inner.into_iter().collect(),
+            outer_required: outer.into_iter().collect(),
+            outwards: outwards.into_iter().collect(),
+            compnode_users: users.into_iter().collect(),
+        }
+    }
+
+    /// Aggregate forward FLOPs of a sub-graph.
+    pub fn sub_flops(&self, g: &Graph, sub: usize) -> f64 {
+        self.subgraphs[sub].nodes.iter().map(|&n| flops::fwd_flops(g.node(n))).sum()
+    }
+
+    /// Aggregate GPU memory (training) of a sub-graph — `D_gpu(G_Sk)` of Eq. 2.
+    pub fn sub_gpu_bytes(&self, g: &Graph, sub: usize) -> u64 {
+        self.subgraphs[sub].nodes.iter().map(|&n| flops::gpu_bytes_train(g.node(n))).sum()
+    }
+
+    /// Aggregate parameter bytes (what must be checkpointed / synchronized
+    /// with the supernode, §3.5).
+    pub fn sub_param_bytes(&self, g: &Graph, sub: usize) -> u64 {
+        self.subgraphs[sub].nodes.iter().map(|&n| flops::param_bytes(g.node(n))).sum()
+    }
+
+    /// Validate the partition invariants (used by property tests):
+    /// every node in exactly one sub-graph, ids dense.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        if self.of_node.len() != g.len() {
+            return Err("of_node length mismatch".into());
+        }
+        let mut seen = vec![false; g.len()];
+        for sg in &self.subgraphs {
+            for &n in &sg.nodes {
+                if n >= g.len() {
+                    return Err(format!("node {n} out of range"));
+                }
+                if seen[n] {
+                    return Err(format!("node {n} in two subgraphs"));
+                }
+                seen[n] = true;
+                if self.of_node[n] != sg.id {
+                    return Err(format!("of_node[{n}] inconsistent"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("some node unassigned".into());
+        }
+        Ok(())
+    }
+}
+
+/// Exact min-max contiguous partition of `w` into `k` segments (DP).
+/// Returns the index ranges of each segment. Segments may be empty only when
+/// k > len(w).
+fn min_max_contiguous(w: &[f64], k: usize) -> Vec<Vec<usize>> {
+    let n = w.len();
+    let k = k.min(n.max(1));
+    // prefix[i] = sum of w[..i]
+    let mut prefix = vec![0.0; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + w[i];
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // w[a..b]
+    // dp[j][i] = minimal max-load splitting w[..i] into j segments
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        for i in j..=n {
+            // last segment = w[m..i]
+            for m in (j - 1)..i {
+                let cost = dp[j - 1][m].max(seg(m, i));
+                if cost < dp[j][i] {
+                    dp[j][i] = cost;
+                    cut[j][i] = m;
+                }
+            }
+        }
+    }
+    // Reconstruct.
+    let mut bounds = vec![n];
+    let mut i = n;
+    for j in (1..=k).rev() {
+        i = cut[j][i];
+        bounds.push(i);
+    }
+    bounds.reverse(); // 0 = bounds[0] .. bounds[k] = n
+    let mut out = Vec::with_capacity(k);
+    for s in 0..k {
+        out.push((bounds[s]..bounds[s + 1]).collect());
+    }
+    out
+}
+
+/// Contiguous split where segment i receives ≈ `speeds[i]/Σspeeds` of the
+/// total weight (greedy sweep; used for heterogeneous pipelines).
+fn proportional_contiguous(w: &[f64], speeds: &[f64]) -> Vec<Vec<usize>> {
+    let total: f64 = w.iter().sum();
+    let sum_speed: f64 = speeds.iter().sum();
+    let mut out = Vec::with_capacity(speeds.len());
+    let mut pos = 0usize;
+    let mut acc_target = 0.0;
+    let mut acc = 0.0;
+    for (i, &s) in speeds.iter().enumerate() {
+        acc_target += total * s / sum_speed;
+        let mut seg = Vec::new();
+        let last = i == speeds.len() - 1;
+        while pos < w.len() && (last || acc + w[pos] / 2.0 < acc_target) {
+            acc += w[pos];
+            seg.push(pos);
+            pos += 1;
+        }
+        out.push(seg);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::fig3;
+    use crate::models::transformer::TransformerConfig;
+
+    #[test]
+    fn fig3_table3_attrs() {
+        let g = fig3::build();
+        let d = Decomposition::from_assignment(&g, &fig3::paper_partition(&g));
+        d.validate(&g).unwrap();
+        assert_eq!(d.num_subgraphs(), 3);
+
+        let name = |id: NodeId| g.node(id).name.clone();
+        // Subgraph 1 (index 0): outward data = Add, Pool; users = {2,3}.
+        let a0 = d.attrs(&g, 0);
+        let outw: Vec<String> = a0.outwards.iter().map(|&n| name(n)).collect();
+        assert_eq!(outw, vec!["Add", "Pool"]);
+        assert_eq!(a0.compnode_users, vec![1, 2]);
+        assert!(a0.outer_required.is_empty());
+
+        // Subgraph 2: outer required = Add; outwards = Multiply; users = {3}.
+        let a1 = d.attrs(&g, 1);
+        assert_eq!(a1.outer_required.iter().map(|&n| name(n)).collect::<Vec<_>>(), vec!["Add"]);
+        assert_eq!(a1.outwards.iter().map(|&n| name(n)).collect::<Vec<_>>(), vec!["Multiply"]);
+        assert_eq!(a1.compnode_users, vec![2]);
+
+        // Subgraph 3: outer required = {Pool, Multiply}; no outwards.
+        let a2 = d.attrs(&g, 2);
+        let mut outer: Vec<String> = a2.outer_required.iter().map(|&n| name(n)).collect();
+        outer.sort();
+        assert_eq!(outer, vec!["Multiply", "Pool"]);
+        assert!(a2.outwards.is_empty());
+        assert!(a2.compnode_users.is_empty());
+    }
+
+    #[test]
+    fn fig3_cut_edges_match_paper() {
+        let g = fig3::build();
+        let d = Decomposition::from_assignment(&g, &fig3::paper_partition(&g));
+        let cuts: Vec<(String, String)> = d
+            .cut_edges(&g)
+            .iter()
+            .map(|&(a, b)| (g.node(a).name.clone(), g.node(b).name.clone()))
+            .collect();
+        // Black lines in Figure 3: Add→Multiply, Pool→Concat, Multiply→Concat.
+        assert!(cuts.contains(&("Add".into(), "Multiply".into())));
+        assert!(cuts.contains(&("Pool".into(), "Concat".into())));
+        assert!(cuts.contains(&("Multiply".into(), "Concat".into())));
+        assert_eq!(cuts.len(), 3);
+    }
+
+    #[test]
+    fn chain_balanced_covers_and_balances() {
+        let g = TransformerConfig::tiny().build_graph();
+        let d = Decomposition::chain_balanced(&g, 4);
+        d.validate(&g).unwrap();
+        assert_eq!(d.num_subgraphs(), 4);
+        let loads: Vec<f64> = (0..4).map(|s| d.sub_flops(&g, s)).collect();
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        let total: f64 = loads.iter().sum();
+        // Min-max DP: max segment ≤ total/k × slack (model has a huge head
+        // node so allow generous slack, but it must beat the trivial bound).
+        assert!(max < total, "must actually split");
+    }
+
+    #[test]
+    fn chain_balanced_respects_topology() {
+        // Contiguity in topo order ⇒ all cut edges go forward (lower seg →
+        // higher seg).
+        let g = TransformerConfig::tiny().build_graph();
+        let d = Decomposition::chain_balanced(&g, 3);
+        for (src, dst) in d.cut_edges(&g) {
+            assert!(d.of_node[src] <= d.of_node[dst]);
+        }
+    }
+
+    #[test]
+    fn minmax_dp_exact_small_case() {
+        let w = [3.0, 1.0, 1.0, 3.0];
+        let segs = min_max_contiguous(&w, 2);
+        // optimal split: [3,1] [1,3] with max 4
+        let loads: Vec<f64> =
+            segs.iter().map(|s| s.iter().map(|&i| w[i]).sum()).collect();
+        assert_eq!(loads, vec![4.0, 4.0]);
+    }
+
+    #[test]
+    fn proportional_split_tracks_speeds() {
+        let w = vec![1.0; 100];
+        let segs = proportional_contiguous(&w, &[1.0, 3.0]);
+        assert!(segs[0].len() >= 20 && segs[0].len() <= 30, "got {}", segs[0].len());
+        assert_eq!(segs[0].len() + segs[1].len(), 100);
+    }
+
+    #[test]
+    fn bert_large_50way_partition() {
+        // Figure 4: Bert-Large over 50 devices.
+        let g = TransformerConfig::bert_large().build_graph();
+        let d = Decomposition::chain_balanced(&g, 50);
+        d.validate(&g).unwrap();
+        assert_eq!(d.num_subgraphs(), 50);
+        // Every segment non-empty and the load spread is sane.
+        let loads: Vec<f64> = (0..50).map(|s| d.sub_flops(&g, s)).collect();
+        assert!(loads.iter().all(|&l| l >= 0.0));
+        let nonzero = loads.iter().filter(|&&l| l > 0.0).count();
+        assert!(nonzero >= 45, "only {nonzero} segments carry work");
+    }
+}

@@ -1,0 +1,310 @@
+//! Distributed hash table (paper §3.4, §3.9).
+//!
+//! "For efficient management of distributed storage and lookup of data, we
+//! leverage the power of Distributed Hash Table. […] Each compnode
+//! independently stores and retrieves data, making the system resilient to
+//! individual node failures."
+//!
+//! Implementation: a consistent-hash ring with virtual nodes and k-way
+//! successor replication. Keys are strings (e.g. `"dataset/shard/17"`,
+//! `"act/job3/node41/mb2"`); values are opaque byte blobs. Node join/leave
+//! triggers the minimal re-replication consistent hashing promises, and
+//! reads fall back across replicas — `get` succeeds as long as at least one
+//! replica survives, which is the churn-resilience property the paper
+//! relies on for dataset and activation distribution.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::util::fnv1a;
+
+/// Peer identifier (same id space as compnodes).
+pub type PeerId = usize;
+
+/// Number of virtual nodes per peer on the ring (smooths key distribution).
+const VNODES: usize = 32;
+
+/// One peer's local key-value store.
+#[derive(Debug, Default, Clone)]
+pub struct LocalStore {
+    map: HashMap<String, Vec<u8>>,
+}
+
+impl LocalStore {
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+    pub fn bytes(&self) -> u64 {
+        self.map.values().map(|v| v.len() as u64).sum()
+    }
+}
+
+/// The DHT: ring membership + per-peer stores + replication policy.
+#[derive(Debug)]
+pub struct Dht {
+    ring: BTreeMap<u64, PeerId>,
+    stores: HashMap<PeerId, LocalStore>,
+    replication: usize,
+}
+
+/// DHT operation errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DhtError {
+    #[error("no peers in the ring")]
+    Empty,
+    #[error("key '{0}' not found on any live replica")]
+    NotFound(String),
+    #[error("peer {0} already joined")]
+    AlreadyJoined(PeerId),
+    #[error("peer {0} not in the ring")]
+    UnknownPeer(PeerId),
+}
+
+/// SplitMix64 finalizer: FNV on short, similar strings clusters in the low
+/// bits; this scatters ring positions uniformly.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+fn vnode_hash(peer: PeerId, v: usize) -> u64 {
+    mix64(fnv1a(format!("peer:{peer}:vnode:{v}").as_bytes()))
+}
+
+fn key_hash(key: &str) -> u64 {
+    mix64(fnv1a(key.as_bytes()))
+}
+
+impl Dht {
+    /// Create with a replication factor (k successors store each key).
+    pub fn new(replication: usize) -> Dht {
+        Dht { ring: BTreeMap::new(), stores: HashMap::new(), replication: replication.max(1) }
+    }
+
+    pub fn peers(&self) -> Vec<PeerId> {
+        let mut p: Vec<PeerId> = self.stores.keys().copied().collect();
+        p.sort();
+        p
+    }
+
+    pub fn len_peers(&self) -> usize {
+        self.stores.len()
+    }
+
+    /// Add a peer; re-replicates affected keys.
+    pub fn join(&mut self, peer: PeerId) -> Result<(), DhtError> {
+        if self.stores.contains_key(&peer) {
+            return Err(DhtError::AlreadyJoined(peer));
+        }
+        self.stores.insert(peer, LocalStore::default());
+        for v in 0..VNODES {
+            self.ring.insert(vnode_hash(peer, v), peer);
+        }
+        self.rebalance();
+        Ok(())
+    }
+
+    /// Graceful or crash departure: the peer's store is dropped (crash
+    /// semantics — data survives only via replicas), ring entries removed,
+    /// then re-replication restores the invariant.
+    pub fn leave(&mut self, peer: PeerId) -> Result<(), DhtError> {
+        if self.stores.remove(&peer).is_none() {
+            return Err(DhtError::UnknownPeer(peer));
+        }
+        for v in 0..VNODES {
+            self.ring.remove(&vnode_hash(peer, v));
+        }
+        self.rebalance();
+        Ok(())
+    }
+
+    /// The replica set for a key: first `replication` *distinct* peers
+    /// clockwise from the key's hash.
+    pub fn owners(&self, key: &str) -> Vec<PeerId> {
+        let h = key_hash(key);
+        let mut owners = Vec::new();
+        let mut seen = HashSet::new();
+        for (_, &p) in self.ring.range(h..).chain(self.ring.range(..h)) {
+            if seen.insert(p) {
+                owners.push(p);
+                if owners.len() == self.replication.min(self.stores.len()) {
+                    break;
+                }
+            }
+        }
+        owners
+    }
+
+    /// Store a value on all replicas.
+    pub fn put(&mut self, key: &str, value: Vec<u8>) -> Result<Vec<PeerId>, DhtError> {
+        let owners = self.owners(key);
+        if owners.is_empty() {
+            return Err(DhtError::Empty);
+        }
+        for &p in &owners {
+            self.stores.get_mut(&p).unwrap().map.insert(key.to_string(), value.clone());
+        }
+        Ok(owners)
+    }
+
+    /// Read from the first replica holding the key.
+    pub fn get(&self, key: &str) -> Result<&[u8], DhtError> {
+        if self.stores.is_empty() {
+            return Err(DhtError::Empty);
+        }
+        for p in self.owners(key) {
+            if let Some(v) = self.stores.get(&p).and_then(|s| s.map.get(key)) {
+                return Ok(v);
+            }
+        }
+        // Fall back to a full scan (a replica may hold stale extra copies
+        // after churn; correctness over elegance).
+        for s in self.stores.values() {
+            if let Some(v) = s.map.get(key) {
+                return Ok(v);
+            }
+        }
+        Err(DhtError::NotFound(key.to_string()))
+    }
+
+    /// Remove a key everywhere.
+    pub fn delete(&mut self, key: &str) {
+        for s in self.stores.values_mut() {
+            s.map.remove(key);
+        }
+    }
+
+    /// Restore the replication invariant after membership changes: every
+    /// key present anywhere must live exactly on its current owner set.
+    fn rebalance(&mut self) {
+        if self.stores.is_empty() {
+            return;
+        }
+        // Collect all (key, value) pairs (replicas dedupe by key).
+        let mut all: HashMap<String, Vec<u8>> = HashMap::new();
+        for s in self.stores.values() {
+            for (k, v) in &s.map {
+                all.entry(k.clone()).or_insert_with(|| v.clone());
+            }
+        }
+        for s in self.stores.values_mut() {
+            s.map.clear();
+        }
+        for (k, v) in all {
+            let owners = self.owners(&k);
+            for p in owners {
+                self.stores.get_mut(&p).unwrap().map.insert(k.clone(), v.clone());
+            }
+        }
+    }
+
+    /// Per-peer key counts (used by balance tests / metrics).
+    pub fn distribution(&self) -> HashMap<PeerId, usize> {
+        self.stores.iter().map(|(&p, s)| (p, s.len())).collect()
+    }
+
+    /// Total stored bytes (including replication).
+    pub fn total_bytes(&self) -> u64 {
+        self.stores.values().map(|s| s.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dht_with(n: usize, repl: usize) -> Dht {
+        let mut d = Dht::new(repl);
+        for p in 0..n {
+            d.join(p).unwrap();
+        }
+        d
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut d = dht_with(5, 2);
+        d.put("hello", b"world".to_vec()).unwrap();
+        assert_eq!(d.get("hello").unwrap(), b"world");
+        assert_eq!(d.get("missing"), Err(DhtError::NotFound("missing".into())));
+    }
+
+    #[test]
+    fn replication_factor_respected() {
+        let mut d = dht_with(5, 3);
+        let owners = d.put("k", vec![1]).unwrap();
+        assert_eq!(owners.len(), 3);
+        let holding = d.stores.values().filter(|s| s.map.contains_key("k")).count();
+        assert_eq!(holding, 3);
+    }
+
+    #[test]
+    fn survives_replica_failures() {
+        let mut d = dht_with(6, 3);
+        for i in 0..100 {
+            d.put(&format!("key/{i}"), vec![i as u8]).unwrap();
+        }
+        // Kill two peers — with replication 3 every key must survive.
+        let victims: Vec<PeerId> = d.peers().into_iter().take(2).collect();
+        for v in victims {
+            d.leave(v).unwrap();
+        }
+        for i in 0..100 {
+            assert_eq!(d.get(&format!("key/{i}")).unwrap(), &[i as u8]);
+        }
+    }
+
+    #[test]
+    fn join_rebalances_and_preserves_data() {
+        let mut d = dht_with(3, 2);
+        for i in 0..50 {
+            d.put(&format!("k{i}"), vec![i as u8]).unwrap();
+        }
+        d.join(99).unwrap();
+        for i in 0..50 {
+            assert_eq!(d.get(&format!("k{i}")).unwrap(), &[i as u8]);
+        }
+        // Invariant: every key lives exactly on its owner set.
+        for i in 0..50 {
+            let key = format!("k{i}");
+            let owners: HashSet<PeerId> = d.owners(&key).into_iter().collect();
+            for (&p, s) in &d.stores {
+                assert_eq!(s.map.contains_key(&key), owners.contains(&p), "key {key} peer {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn distribution_roughly_balanced() {
+        let mut d = dht_with(8, 1);
+        for i in 0..2000 {
+            d.put(&format!("obj/{i}"), vec![0u8]).unwrap();
+        }
+        let dist = d.distribution();
+        let min = *dist.values().min().unwrap();
+        let max = *dist.values().max().unwrap();
+        // Virtual nodes keep skew moderate.
+        assert!(min > 0, "some peer owns nothing");
+        assert!((max as f64) < 4.0 * (min as f64).max(1.0), "skew {min}..{max}");
+    }
+
+    #[test]
+    fn membership_errors() {
+        let mut d = dht_with(2, 1);
+        assert_eq!(d.join(0), Err(DhtError::AlreadyJoined(0)));
+        assert_eq!(d.leave(42), Err(DhtError::UnknownPeer(42)));
+        let empty = Dht::new(2);
+        assert_eq!(empty.get("x"), Err(DhtError::Empty));
+    }
+
+    #[test]
+    fn delete_removes_everywhere() {
+        let mut d = dht_with(4, 2);
+        d.put("gone", vec![9]).unwrap();
+        d.delete("gone");
+        assert!(matches!(d.get("gone"), Err(DhtError::NotFound(_))));
+    }
+}

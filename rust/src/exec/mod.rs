@@ -1,0 +1,90 @@
+//! The execution plane (paper §3.1, goals P3/P4).
+//!
+//! "The execution plane is responsible for designing and implementing
+//! general interfaces to adapt different ML Engines to execute DAGs. Thus,
+//! the compnodes can utilize devices and DL frameworks according to their
+//! preference."
+//!
+//! [`Engine`] is that general interface: a backend that can initialize
+//! parameters, run one operator's forward, and run its backward
+//! (vector-Jacobian product). Two engines ship in-tree:
+//!
+//! * [`RefEngine`] — pure-rust f32 interpreter of every IR operator; used by
+//!   the simulator, the quickstart and as the numerics oracle;
+//! * [`XlaEngine`](crate::exec::xla_engine::XlaEngine) — executes
+//!   AOT-compiled HLO artifacts through PJRT (the production hot path for
+//!   `StageCall` graphs).
+
+pub mod optim;
+pub mod ref_engine;
+pub mod xla_engine;
+
+pub use optim::{Adam, Optimizer, Sgd};
+pub use ref_engine::RefEngine;
+
+use crate::dag::Node;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Result of one backward task.
+#[derive(Debug)]
+pub struct BackwardOut {
+    /// Gradient wrt each forward arg (aligned with `node.args`; `None`
+    /// where no gradient flows, e.g. integer labels).
+    pub input_grads: Vec<Option<Tensor>>,
+    /// Gradient wrt each parameter (aligned with the node's param list;
+    /// empty for non-parametric ops).
+    pub param_grads: Vec<Tensor>,
+}
+
+/// A pluggable ML engine (the execution plane's "general interface").
+///
+/// Deliberately not `Send`: PJRT handles are thread-local, so every
+/// compnode thread constructs its own engine (see `cluster::train`).
+pub trait Engine {
+    /// Backend name, for logs and the compnode registry.
+    fn name(&self) -> &'static str;
+
+    /// Initialize the node's parameter list (empty for non-parametric ops).
+    fn init_params(&mut self, node: &Node, rng: &mut Rng) -> crate::Result<Vec<Tensor>>;
+
+    /// Forward: `inputs` aligned with `node.args`. Returns the output.
+    fn forward(
+        &mut self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+    ) -> crate::Result<Tensor>;
+
+    /// Backward (rematerializing: recomputes whatever forward intermediates
+    /// it needs from `inputs`). `out_grad = None` seeds a loss node with
+    /// dL/dL = 1.
+    fn backward(
+        &mut self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        out_grad: Option<&Tensor>,
+    ) -> crate::Result<BackwardOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DType, Graph, OpKind, Shape};
+
+    /// The trait must be object-safe (compnodes hold `Box<dyn Engine>`).
+    #[test]
+    fn engine_is_object_safe() {
+        let mut e: Box<dyn Engine> = Box::new(RefEngine::new());
+        assert_eq!(e.name(), "ref");
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 4]), DType::F32);
+        let id = g
+            .op("fc", OpKind::Linear { in_features: 4, out_features: 3, bias: true }, &[x])
+            .unwrap();
+        let mut rng = Rng::new(0);
+        let params = e.init_params(g.node(id), &mut rng).unwrap();
+        assert_eq!(params.len(), 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Optimizers for the Update task (paper §3.6).
+//!
+//! "To support adaptive optimizers for different parametric OPs, users can
+//! define optimizers and corresponding hyperparameters in the configuration
+//! file. The broker assigns the appropriate optimizers to the target
+//! compnode based on its assigned OPs."
+//!
+//! SGD (+momentum) and Adam are provided; both operate on per-node parameter
+//! lists so each compnode updates exactly the parameters it hosts.
+
+use crate::tensor::Tensor;
+
+/// A stateful optimizer over one parameter list.
+pub trait Optimizer: Send {
+    /// Apply one update step given gradients aligned with `params`.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]);
+    /// Name for config/logging.
+    fn name(&self) -> &'static str;
+}
+
+/// SGD with optional momentum.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<Tensor>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Sgd {
+        Sgd { lr, momentum: 0.0, velocity: vec![] }
+    }
+    pub fn with_momentum(lr: f32, momentum: f32) -> Sgd {
+        Sgd { lr, momentum, velocity: vec![] }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        if self.momentum == 0.0 {
+            for (p, g) in params.iter_mut().zip(grads) {
+                p.axpy(-self.lr, g);
+            }
+            return;
+        }
+        if self.velocity.is_empty() {
+            self.velocity = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        }
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
+            // v = momentum·v + g ; p -= lr·v
+            for (vv, gg) in v.f_mut().iter_mut().zip(g.f()) {
+                *vv = self.momentum * *vv + gg;
+            }
+            p.axpy(-self.lr, v);
+        }
+    }
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction — mirrors the L2 `adam_update`
+/// artifact so RefEngine and XlaEngine training trajectories are comparable.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![], v: vec![] }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+            self.v = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t);
+        let b2t = 1.0 - self.beta2.powi(self.t);
+        for (((p, g), m), v) in params.iter_mut().zip(grads).zip(&mut self.m).zip(&mut self.v) {
+            let pf = p.f_mut();
+            let gf = g.f();
+            let mf = m.f_mut();
+            let vf = v.f_mut();
+            for i in 0..pf.len() {
+                mf[i] = self.beta1 * mf[i] + (1.0 - self.beta1) * gf[i];
+                vf[i] = self.beta2 * vf[i] + (1.0 - self.beta2) * gf[i] * gf[i];
+                let mhat = mf[i] / b1t;
+                let vhat = vf[i] / b2t;
+                pf[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(p) = ||p - target||² and check convergence.
+    fn quadratic_descent(opt: &mut dyn Optimizer, steps: usize) -> f32 {
+        let target = [1.0f32, -2.0, 3.0];
+        let mut params = vec![Tensor::from_vec(&[3], vec![0.0, 0.0, 0.0])];
+        for _ in 0..steps {
+            let g: Vec<f32> =
+                params[0].f().iter().zip(&target).map(|(&p, &t)| 2.0 * (p - t)).collect();
+            let grads = vec![Tensor::from_vec(&[3], g)];
+            opt.step(&mut params, &grads);
+        }
+        params[0].f().iter().zip(&target).map(|(&p, &t)| (p - t).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut opt = Sgd::new(0.1);
+        assert!(quadratic_descent(&mut opt, 200) < 1e-4);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let mut plain = Sgd::new(0.02);
+        let mut mom = Sgd::with_momentum(0.02, 0.9);
+        let e_plain = quadratic_descent(&mut plain, 50);
+        let e_mom = quadratic_descent(&mut mom, 50);
+        assert!(e_mom < e_plain, "momentum {e_mom} vs plain {e_plain}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut opt = Adam::new(0.1);
+        assert!(quadratic_descent(&mut opt, 300) < 1e-3);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction, the first Adam step ≈ lr in each coordinate.
+        let mut opt = Adam::new(0.1);
+        let mut params = vec![Tensor::from_vec(&[2], vec![0.0, 0.0])];
+        let grads = vec![Tensor::from_vec(&[2], vec![5.0, -0.3])];
+        opt.step(&mut params, &grads);
+        for (&p, &g) in params[0].f().iter().zip(grads[0].f()) {
+            assert!((p.abs() - 0.1).abs() < 1e-3);
+            assert!(p.signum() == -g.signum());
+        }
+    }
+}

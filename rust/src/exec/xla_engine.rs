@@ -1,0 +1,369 @@
+//! The XLA execution-plane backend: runs `StageCall` operators through
+//! AOT-compiled PJRT artifacts (the production hot path).
+//!
+//! Artifact calling conventions (fixed jointly with `python/compile/aot.py`):
+//!
+//! | artifact          | inputs                                | outputs                          |
+//! |-------------------|---------------------------------------|----------------------------------|
+//! | `embed_fwd`       | params…, tokens                       | h                                |
+//! | `embed_bwd`       | params…, tokens, dh                   | dparams…                         |
+//! | `block{i}_fwd`    | params…, h                            | h'                               |
+//! | `block{i}_bwd`    | params…, h, dh'                       | dh, dparams…                     |
+//! | `head_fwd`        | params…, h, labels                    | loss                             |
+//! | `head_bwd`        | params…, h, labels                    | dh, dparams…, loss               |
+//! | `{stage}_update`  | params…, grads…, m…, v…, step         | params…, m…, v…                  |
+//!
+//! Backward artifacts **rematerialize** the forward internally, so the only
+//! state a compnode must stash per microbatch is the stage *input* — the
+//! "trading memory for computation" design the paper cites for low-memory
+//! devices (§2.4).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dag::{Node, OpKind};
+use crate::exec::{BackwardOut, Engine};
+use crate::runtime::{Manifest, Runtime};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Stage role, derived from the stage name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Embed,
+    Block,
+    Head,
+}
+
+/// Classify a stage by name (`embed`, `block{i}`, `head`).
+pub fn stage_kind(stage: &str) -> Result<StageKind> {
+    if stage == "embed" {
+        Ok(StageKind::Embed)
+    } else if stage == "head" {
+        Ok(StageKind::Head)
+    } else if stage.starts_with("block") {
+        Ok(StageKind::Block)
+    } else {
+        bail!("unknown stage name '{stage}'")
+    }
+}
+
+/// XLA-backed engine for coarse `StageCall` graphs.
+pub struct XlaEngine {
+    runtime: Runtime,
+    manifest: Manifest,
+}
+
+impl XlaEngine {
+    /// Load all artifacts from `dir` (a preset directory with
+    /// `manifest.json`).
+    pub fn load(dir: &std::path::Path) -> Result<XlaEngine> {
+        let mut runtime = Runtime::cpu()?;
+        let manifest = runtime.load_dir(dir)?;
+        Ok(XlaEngine { runtime, manifest })
+    }
+
+    /// Load only the artifacts belonging to `stage` (what a compnode hosting
+    /// a single pipeline stage does).
+    pub fn load_stage(dir: &std::path::Path, stage: &str) -> Result<XlaEngine> {
+        let mut runtime = Runtime::cpu()?;
+        let prefix = format!("{stage}_");
+        let manifest = runtime.load_dir_filtered(dir, |name| name.starts_with(&prefix))?;
+        Ok(XlaEngine { runtime, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Initialize the parameter list of `stage` from the manifest specs.
+    pub fn init_stage_params(&self, stage: &str, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        let specs = self
+            .manifest
+            .stage_params
+            .get(stage)
+            .ok_or_else(|| anyhow!("stage '{stage}' not in manifest"))?;
+        Ok(specs.iter().map(|s| s.materialize(rng)).collect())
+    }
+
+    /// Forward one stage. `inputs` is `[tokens]` / `[h]` / `[h, labels]`.
+    pub fn stage_forward(
+        &self,
+        stage: &str,
+        params: &[Tensor],
+        inputs: &[&Tensor],
+    ) -> Result<Tensor> {
+        let mut args: Vec<Tensor> = params.to_vec();
+        args.extend(inputs.iter().map(|t| (*t).clone()));
+        let mut out = self.runtime.run(&format!("{stage}_fwd"), &args)?;
+        if out.is_empty() {
+            bail!("{stage}_fwd produced no outputs");
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Backward one stage. Returns `(dx, dparams, loss)` where `dx` is
+    /// `None` for the embed stage and `loss` is `Some` for the head stage.
+    pub fn stage_backward(
+        &self,
+        stage: &str,
+        params: &[Tensor],
+        inputs: &[&Tensor],
+        out_grad: Option<&Tensor>,
+    ) -> Result<(Option<Tensor>, Vec<Tensor>, Option<f32>)> {
+        let kind = stage_kind(stage)?;
+        let mut args: Vec<Tensor> = params.to_vec();
+        args.extend(inputs.iter().map(|t| (*t).clone()));
+        if let Some(g) = out_grad {
+            args.push(g.clone());
+        } else if kind != StageKind::Head {
+            bail!("stage '{stage}' backward requires an upstream gradient");
+        }
+        let mut out = self.runtime.run(&format!("{stage}_bwd"), &args)?;
+        let n_params = params.len();
+        match kind {
+            StageKind::Embed => {
+                if out.len() != n_params {
+                    bail!("embed_bwd arity {} != params {}", out.len(), n_params);
+                }
+                Ok((None, out, None))
+            }
+            StageKind::Block => {
+                if out.len() != n_params + 1 {
+                    bail!("block bwd arity {} != 1+params {}", out.len(), n_params);
+                }
+                let dx = out.remove(0);
+                Ok((Some(dx), out, None))
+            }
+            StageKind::Head => {
+                if out.len() != n_params + 2 {
+                    bail!("head_bwd arity {} != 2+params {}", out.len(), n_params);
+                }
+                let dx = out.remove(0);
+                let loss = out.pop().unwrap().item();
+                Ok((Some(dx), out, Some(loss)))
+            }
+        }
+    }
+
+    /// Adam update through the `{stage}_update` artifact. Mutates `params`,
+    /// `m`, `v` in place; `step` is 1-based.
+    pub fn stage_update(
+        &self,
+        stage: &str,
+        params: &mut Vec<Tensor>,
+        grads: &[Tensor],
+        m: &mut Vec<Tensor>,
+        v: &mut Vec<Tensor>,
+        step: i32,
+    ) -> Result<()> {
+        let n = params.len();
+        if grads.len() != n || m.len() != n || v.len() != n {
+            bail!("update arity mismatch for stage '{stage}'");
+        }
+        let mut args: Vec<Tensor> = Vec::with_capacity(3 * n + 1);
+        args.extend(params.iter().cloned());
+        args.extend(grads.iter().cloned());
+        args.extend(m.iter().cloned());
+        args.extend(v.iter().cloned());
+        args.push(Tensor::from_ivec(&[], vec![step]));
+        let mut out = self.runtime.run(&format!("{stage}_update"), &args)?;
+        if out.len() != 3 * n {
+            bail!("{stage}_update returned {} outputs, want {}", out.len(), 3 * n);
+        }
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        *params = out;
+        *m = new_m;
+        *v = new_v;
+        Ok(())
+    }
+}
+
+/// Device-resident training state of one pipeline stage (hot-path variant).
+///
+/// Parameters (and Adam moments) live as PJRT buffers that survive across
+/// microbatches; only activations/gradients cross the host boundary per
+/// call. See EXPERIMENTS.md §Perf for the before/after.
+pub struct StageState {
+    pub stage: String,
+    /// Host copy of the parameters (checkpointing / inspection).
+    pub params: Vec<Tensor>,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    m_bufs: Vec<xla::PjRtBuffer>,
+    v_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl StageState {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+impl XlaEngine {
+    /// Initialize a device-resident stage state.
+    pub fn new_stage_state(&self, stage: &str, rng: &mut Rng) -> Result<StageState> {
+        let params = self.init_stage_params(stage, rng)?;
+        let param_bufs =
+            params.iter().map(|p| self.runtime.to_buffer(p)).collect::<Result<Vec<_>>>()?;
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let m_bufs =
+            zeros.iter().map(|z| self.runtime.to_buffer(z)).collect::<Result<Vec<_>>>()?;
+        let v_bufs =
+            zeros.iter().map(|z| self.runtime.to_buffer(z)).collect::<Result<Vec<_>>>()?;
+        Ok(StageState { stage: stage.to_string(), params, param_bufs, m_bufs, v_bufs })
+    }
+
+    /// Forward with cached parameter buffers.
+    pub fn forward_cached(&self, st: &StageState, inputs: &[&Tensor]) -> Result<Tensor> {
+        let in_bufs: Vec<xla::PjRtBuffer> =
+            inputs.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = st.param_bufs.iter().collect();
+        args.extend(in_bufs.iter());
+        let mut out = self.runtime.execute_buffers(&format!("{}_fwd", st.stage), &args)?;
+        if out.is_empty() {
+            bail!("{}_fwd produced no outputs", st.stage);
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Backward with cached parameter buffers; same contract as
+    /// [`Self::stage_backward`].
+    pub fn backward_cached(
+        &self,
+        st: &StageState,
+        inputs: &[&Tensor],
+        out_grad: Option<&Tensor>,
+    ) -> Result<(Option<Tensor>, Vec<Tensor>, Option<f32>)> {
+        let kind = stage_kind(&st.stage)?;
+        let mut in_bufs: Vec<xla::PjRtBuffer> =
+            inputs.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<_>>()?;
+        if let Some(g) = out_grad {
+            in_bufs.push(self.runtime.to_buffer(g)?);
+        } else if kind != StageKind::Head {
+            bail!("stage '{}' backward requires an upstream gradient", st.stage);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = st.param_bufs.iter().collect();
+        args.extend(in_bufs.iter());
+        let mut out = self.runtime.execute_buffers(&format!("{}_bwd", st.stage), &args)?;
+        let n = st.params.len();
+        match kind {
+            StageKind::Embed => {
+                if out.len() != n {
+                    bail!("embed_bwd arity {} != params {}", out.len(), n);
+                }
+                Ok((None, out, None))
+            }
+            StageKind::Block => {
+                if out.len() != n + 1 {
+                    bail!("block bwd arity {} != 1+params {}", out.len(), n);
+                }
+                let dx = out.remove(0);
+                Ok((Some(dx), out, None))
+            }
+            StageKind::Head => {
+                if out.len() != n + 2 {
+                    bail!("head_bwd arity {} != 2+params {}", out.len(), n);
+                }
+                let dx = out.remove(0);
+                let loss = out.pop().unwrap().item();
+                Ok((Some(dx), out, Some(loss)))
+            }
+        }
+    }
+
+    /// Adam update keeping params/m/v device-resident: only the gradients
+    /// and the step scalar cross the host boundary per step.
+    pub fn update_cached(
+        &self,
+        st: &mut StageState,
+        grads: &[Tensor],
+        step: i32,
+    ) -> Result<()> {
+        let n = st.params.len();
+        if grads.len() != n {
+            bail!("update arity mismatch for stage '{}'", st.stage);
+        }
+        let grad_bufs: Vec<xla::PjRtBuffer> =
+            grads.iter().map(|g| self.runtime.to_buffer(g)).collect::<Result<_>>()?;
+        let step_buf = self.runtime.to_buffer(&Tensor::from_ivec(&[], vec![step]))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 * n + 1);
+        args.extend(st.param_bufs.iter());
+        args.extend(grad_bufs.iter());
+        args.extend(st.m_bufs.iter());
+        args.extend(st.v_bufs.iter());
+        args.push(&step_buf);
+        let mut out =
+            self.runtime.execute_buffers(&format!("{}_update", st.stage), &args)?;
+        if out.len() != 3 * n {
+            bail!("{}_update returned {} outputs, want {}", st.stage, out.len(), 3 * n);
+        }
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        st.params = out;
+        st.param_bufs =
+            st.params.iter().map(|p| self.runtime.to_buffer(p)).collect::<Result<_>>()?;
+        st.m_bufs = new_m.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<_>>()?;
+        st.v_bufs = new_v.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<_>>()?;
+        Ok(())
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn init_params(&mut self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        match &node.kind {
+            OpKind::StageCall { stage, .. } => self.init_stage_params(stage, rng),
+            _ => Ok(vec![]),
+        }
+    }
+
+    fn forward(&mut self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        match &node.kind {
+            OpKind::StageCall { stage, .. } => self.stage_forward(stage, params, inputs),
+            other => bail!("XlaEngine executes StageCall ops only, got {}", other.name()),
+        }
+    }
+
+    fn backward(
+        &mut self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        out_grad: Option<&Tensor>,
+    ) -> Result<BackwardOut> {
+        match &node.kind {
+            OpKind::StageCall { stage, .. } => {
+                let (dx, dparams, _loss) =
+                    self.stage_backward(stage, params, inputs, out_grad)?;
+                let mut input_grads: Vec<Option<Tensor>> = vec![dx];
+                // Extra args (labels on the head stage) get no gradient.
+                while input_grads.len() < node.args.len() {
+                    input_grads.push(None);
+                }
+                Ok(BackwardOut { input_grads, param_grads: dparams })
+            }
+            other => bail!("XlaEngine executes StageCall ops only, got {}", other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_kind_classification() {
+        assert_eq!(stage_kind("embed").unwrap(), StageKind::Embed);
+        assert_eq!(stage_kind("block0").unwrap(), StageKind::Block);
+        assert_eq!(stage_kind("block11").unwrap(), StageKind::Block);
+        assert_eq!(stage_kind("head").unwrap(), StageKind::Head);
+        assert!(stage_kind("decoder").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Incentive mechanism (paper §2.5): a contribution ledger.
+//!
+//! The paper argues decentralized training needs economic catalysts robust
+//! to (1) online arrival/departure, (2) competing uses of the hardware and
+//! (3) malicious free-riders. We implement the accounting substrate those
+//! mechanisms need: per-node contribution records (compute + traffic +
+//! storage), credit pricing, and a verification hook that discounts
+//! unverified work — the "contribute nothing but endeavor to get large
+//! paybacks" defense.
+
+use std::collections::BTreeMap;
+
+/// One node's accumulated (verified and claimed) contributions.
+#[derive(Debug, Default, Clone)]
+pub struct Contribution {
+    /// FLOPs of task work whose outputs passed verification.
+    pub verified_flops: f64,
+    /// FLOPs claimed but not (yet) verified.
+    pub unverified_flops: f64,
+    /// Bytes served over the network (activations, DHT traffic).
+    pub bytes_served: u64,
+    /// Byte-seconds of DHT storage provided.
+    pub storage_byte_secs: f64,
+    /// Seconds of liveness (heartbeats honored).
+    pub uptime_secs: f64,
+}
+
+/// Credit pricing: how contributions convert to credits.
+#[derive(Debug, Clone)]
+pub struct Pricing {
+    /// Credits per verified TFLOP.
+    pub per_tflop: f64,
+    /// Credits per GiB served.
+    pub per_gib: f64,
+    /// Credits per GiB·hour stored.
+    pub per_gib_hour: f64,
+    /// Credits per hour of uptime (availability reward for supernodes).
+    pub per_uptime_hour: f64,
+    /// Fraction of the verified rate paid for *unverified* work. Keeping
+    /// this well below 1 removes the incentive to fabricate results.
+    pub unverified_discount: f64,
+}
+
+impl Default for Pricing {
+    fn default() -> Pricing {
+        Pricing {
+            per_tflop: 1.0,
+            per_gib: 0.05,
+            per_gib_hour: 0.01,
+            per_uptime_hour: 0.1,
+            unverified_discount: 0.1,
+        }
+    }
+}
+
+/// The ledger: contribution records + settled credit balances.
+#[derive(Debug, Default)]
+pub struct Ledger {
+    contrib: BTreeMap<usize, Contribution>,
+    balance: BTreeMap<usize, f64>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    fn entry(&mut self, node: usize) -> &mut Contribution {
+        self.contrib.entry(node).or_default()
+    }
+
+    /// Record task work. `verified` marks whether an independent check
+    /// (e.g. recompute-on-supernode spot check) confirmed the output.
+    pub fn record_compute(&mut self, node: usize, flops: f64, verified: bool) {
+        let c = self.entry(node);
+        if verified {
+            c.verified_flops += flops;
+        } else {
+            c.unverified_flops += flops;
+        }
+    }
+
+    /// Promote previously unverified work after a successful audit.
+    pub fn verify(&mut self, node: usize, flops: f64) {
+        let c = self.entry(node);
+        let moved = flops.min(c.unverified_flops);
+        c.unverified_flops -= moved;
+        c.verified_flops += moved;
+    }
+
+    pub fn record_traffic(&mut self, node: usize, bytes: u64) {
+        self.entry(node).bytes_served += bytes;
+    }
+
+    pub fn record_storage(&mut self, node: usize, bytes: u64, secs: f64) {
+        self.entry(node).storage_byte_secs += bytes as f64 * secs;
+    }
+
+    pub fn record_uptime(&mut self, node: usize, secs: f64) {
+        self.entry(node).uptime_secs += secs;
+    }
+
+    pub fn contribution(&self, node: usize) -> Option<&Contribution> {
+        self.contrib.get(&node)
+    }
+
+    /// Settle all pending contributions into credit balances and reset the
+    /// contribution accumulators (one billing period).
+    pub fn settle(&mut self, pricing: &Pricing) {
+        const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+        for (&node, c) in self.contrib.iter_mut() {
+            let credits = c.verified_flops / 1e12 * pricing.per_tflop
+                + c.unverified_flops / 1e12 * pricing.per_tflop * pricing.unverified_discount
+                + c.bytes_served as f64 / GIB * pricing.per_gib
+                + c.storage_byte_secs / GIB / 3600.0 * pricing.per_gib_hour
+                + c.uptime_secs / 3600.0 * pricing.per_uptime_hour;
+            *self.balance.entry(node).or_insert(0.0) += credits;
+            *c = Contribution::default();
+        }
+    }
+
+    pub fn balance(&self, node: usize) -> f64 {
+        self.balance.get(&node).copied().unwrap_or(0.0)
+    }
+
+    /// Nodes whose claimed work is mostly unverified — audit candidates.
+    pub fn suspicious(&self, min_claimed_tflops: f64) -> Vec<usize> {
+        self.contrib
+            .iter()
+            .filter(|(_, c)| {
+                let total = c.verified_flops + c.unverified_flops;
+                total / 1e12 >= min_claimed_tflops
+                    && c.unverified_flops > 0.8 * total.max(f64::EPSILON)
+            })
+            .map(|(&n, _)| n)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verified_work_pays_full_rate() {
+        let mut l = Ledger::new();
+        l.record_compute(1, 5e12, true);
+        l.settle(&Pricing::default());
+        assert!((l.balance(1) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unverified_work_is_discounted() {
+        let mut l = Ledger::new();
+        l.record_compute(1, 5e12, true);
+        l.record_compute(2, 5e12, false);
+        l.settle(&Pricing::default());
+        assert!(l.balance(2) < 0.2 * l.balance(1));
+    }
+
+    #[test]
+    fn audit_promotes_unverified() {
+        let mut l = Ledger::new();
+        l.record_compute(3, 10e12, false);
+        l.verify(3, 10e12);
+        l.settle(&Pricing::default());
+        assert!((l.balance(3) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traffic_storage_uptime_accrue() {
+        let mut l = Ledger::new();
+        const GIB: u64 = 1 << 30;
+        l.record_traffic(4, 20 * GIB);
+        l.record_storage(4, 10 * GIB, 7200.0);
+        l.record_uptime(4, 3600.0);
+        l.settle(&Pricing::default());
+        let expect = 20.0 * 0.05 + 10.0 * 2.0 * 0.01 + 0.1;
+        assert!((l.balance(4) - expect).abs() < 1e-9, "{}", l.balance(4));
+    }
+
+    #[test]
+    fn settle_resets_period() {
+        let mut l = Ledger::new();
+        l.record_compute(1, 1e12, true);
+        l.settle(&Pricing::default());
+        l.settle(&Pricing::default());
+        assert!((l.balance(1) - 1.0).abs() < 1e-9, "no double billing");
+    }
+
+    #[test]
+    fn suspicious_flags_freeriders() {
+        let mut l = Ledger::new();
+        l.record_compute(1, 9e12, false); // 100% unverified
+        l.record_compute(2, 9e12, true); // honest
+        l.record_compute(3, 0.1e12, false); // too small to matter
+        assert_eq!(l.suspicious(1.0), vec![1]);
+    }
+}

@@ -1,0 +1,48 @@
+//! # FusionAI — decentralized training & deployment of LLMs on consumer GPUs
+//!
+//! Reproduction of *FusionAI: Decentralized Training and Deploying LLMs with
+//! Massive Consumer-Level GPUs* (Tang et al., 2023).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — broker, compnodes, DHT, DAG IR + decomposer,
+//!   scheduler, analytic performance model, pipeline engine, simulated WAN,
+//!   compression, metrics and the CLI. Python never runs on this path.
+//! * **L2 (python/compile/model.py)** — the pipeline-stage compute (embedding,
+//!   transformer blocks, head+loss, Adam update) written in JAX and AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled attention,
+//!   int8 quantization) called from L2, validated against pure-jnp oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and [`exec::XlaEngine`] exposes them to the coordinator;
+//! [`exec::RefEngine`] is a pure-rust fallback engine used by the simulator
+//! and tests (the paper's "execution plane" pluggability, goals P3/P4).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index.
+
+pub mod util;
+pub mod tensor;
+pub mod dag;
+pub mod models;
+pub mod perf;
+pub mod decompose;
+pub mod sched;
+pub mod net;
+pub mod dht;
+pub mod compress;
+pub mod broker;
+pub mod compnode;
+pub mod exec;
+pub mod runtime;
+pub mod pipeline;
+pub mod incentive;
+pub mod config;
+pub mod metrics;
+pub mod benchutil;
+pub mod proptesting;
+pub mod cluster;
+pub mod serve;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

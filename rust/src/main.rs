@@ -1,0 +1,240 @@
+//! FusionAI command-line launcher.
+//!
+//! Subcommands (hand-rolled parser — clap is unavailable offline):
+//!
+//! ```text
+//! fusionai estimate --config <fleet.toml>     analytic latency/throughput (Eq. 3/4)
+//! fusionai train    --artifacts <dir> [--steps N] [--microbatches M] [--codec int8|topk|none]
+//! fusionai serve    --artifacts <dir> [--requests N] [--new-tokens K]
+//! fusionai schedule --model <preset> --subtasks K --nodes N --gpu <name>
+//! fusionai info                                GPU database + trend summary
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use fusionai::benchutil::Table;
+use fusionai::cluster::{PipelineTrainer, TrainConfig};
+use fusionai::compress::Codec;
+use fusionai::config::{model_by_name, ExperimentConfig};
+use fusionai::decompose::Decomposition;
+use fusionai::perf::gpus::{lookup, GPU_DB};
+use fusionai::perf::paleo::{DeviceProfile, PaleoModel};
+use fusionai::perf::trends;
+use fusionai::pipeline::analytics::PipelineEstimate;
+use fusionai::sched;
+use fusionai::serve::{run_trace, InferenceServer, Request};
+use fusionai::util::{human_bytes, human_flops, human_secs, Rng};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "estimate" => cmd_estimate(&flags),
+        "train" => cmd_train(&flags),
+        "serve" => cmd_serve(&flags),
+        "schedule" => cmd_schedule(&flags),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `fusionai help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fusionai — decentralized LLM training/serving on consumer GPUs\n\
+         \n\
+         usage:\n\
+           fusionai estimate --config <fleet.toml>\n\
+           fusionai train    --artifacts <dir> [--steps N] [--microbatches M] [--codec int8|topk|none]\n\
+           fusionai serve    --artifacts <dir> [--requests N] [--new-tokens K]\n\
+           fusionai schedule --model <preset> --subtasks K --nodes N --gpu <name>\n\
+           fusionai info\n"
+    );
+}
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+        let val = args.get(i + 1).ok_or_else(|| anyhow!("--{key} needs a value"))?;
+        map.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(map)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants an integer, got '{v}'")),
+    }
+}
+
+/// `estimate`: the paper's §4 analysis on a user-described fleet.
+fn cmd_estimate(flags: &HashMap<String, String>) -> Result<()> {
+    let path = flags.get("config").ok_or_else(|| anyhow!("estimate needs --config"))?;
+    let cfg = ExperimentConfig::from_toml(&std::fs::read_to_string(path)?)?;
+    let g = cfg.model.build_graph();
+    let n: usize = cfg.total_devices();
+    println!(
+        "model {} | {} params | {} fwd FLOPs/batch | {} devices",
+        cfg.model.name,
+        cfg.model.param_count(),
+        human_flops(g.total_fwd_flops()),
+        n
+    );
+    let d = Decomposition::chain_balanced(&g, n);
+    let mut models = Vec::new();
+    for f in &cfg.fleet {
+        for _ in 0..f.count {
+            models.push(PaleoModel::new(DeviceProfile::with_lambda(&f.gpu, f.lambda)));
+        }
+    }
+    let est = PipelineEstimate::from_decomposition(&g, &d, &models, cfg.link, cfg.training);
+    println!("latency (Eq.3, 1 batch):        {}", human_secs(est.latency()));
+    println!(
+        "pipelined (Eq.4, {} batches):  {}",
+        cfg.batches,
+        human_secs(est.pipelined_time(cfg.batches))
+    );
+    println!(
+        "throughput @n_b={}:            {:.3} batches/s (steady-state {:.3})",
+        cfg.batches,
+        est.throughput(cfg.batches),
+        est.steady_state_throughput()
+    );
+    println!("bubble fraction:               {:.1}%", est.bubble_fraction(cfg.batches) * 100.0);
+    println!("comm-bound:                    {}", est.comm_bound());
+    Ok(())
+}
+
+/// `train`: the live pipeline trainer.
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").ok_or_else(|| anyhow!("train needs --artifacts"))?;
+    let mut cfg = TrainConfig::new(dir);
+    cfg.steps = flag_usize(flags, "steps", 50)?;
+    cfg.microbatches = flag_usize(flags, "microbatches", 2)?;
+    cfg.codec = match flags.get("codec").map(String::as_str) {
+        None | Some("none") => None,
+        Some("int8") => Some(Codec::Int8),
+        Some("topk") => Some(Codec::TopK { ratio: 0.1 }),
+        Some(other) => bail!("unknown codec '{other}'"),
+    };
+    let trainer = PipelineTrainer::new(cfg)?;
+    println!(
+        "training preset '{}' for {} steps × {} microbatches over {} stages",
+        trainer.manifest.preset,
+        trainer.config.steps,
+        trainer.config.microbatches,
+        trainer.manifest.stages.len()
+    );
+    let report = trainer.run()?;
+    if let (Some((s0, l0)), Some((s1, l1))) = (report.losses.first(), report.losses.last()) {
+        println!("loss: step {s0} = {l0:.4}  →  step {s1} = {l1:.4}");
+    }
+    println!(
+        "wall {:.1}s | {:.0} tokens/s | comm {} (modelled WAN time {})",
+        report.wall_seconds,
+        report.tokens_per_second,
+        human_bytes(report.comm_bytes),
+        human_secs(report.comm_model_seconds)
+    );
+    Ok(())
+}
+
+/// `serve`: batched greedy-decoding inference.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").ok_or_else(|| anyhow!("serve needs --artifacts"))?;
+    let n_requests = flag_usize(flags, "requests", 16)?;
+    let n_new = flag_usize(flags, "new-tokens", 8)?;
+    let server = InferenceServer::load(std::path::Path::new(dir), 7)?;
+    let mut rng = Rng::new(123);
+    let prompt_len = (server.seq / 4).max(1);
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|id| Request {
+            id,
+            prompt: (0..prompt_len)
+                .map(|_| rng.below(server.vocab as u64) as i32)
+                .collect(),
+            arrival_s: id as f64 * 0.01,
+        })
+        .collect();
+    let (responses, stats) = run_trace(&server, requests, n_new)?;
+    println!(
+        "served {} requests in {:.2}s | {:.2} req/s | {:.1} tokens/s | p50 latency {} | p99 {}",
+        stats.completed,
+        stats.wall_seconds,
+        stats.requests_per_second,
+        stats.tokens_per_second,
+        human_secs(stats.latency.median()),
+        human_secs(stats.latency.p99()),
+    );
+    println!("first response: {:?}", &responses[0].tokens[..responses[0].tokens.len().min(16)]);
+    Ok(())
+}
+
+/// `schedule`: show the Eq.2 assignment for a preset over a uniform fleet.
+fn cmd_schedule(flags: &HashMap<String, String>) -> Result<()> {
+    let model = model_by_name(flags.get("model").map(String::as_str).unwrap_or("bert-large"))?;
+    let subtasks = flag_usize(flags, "subtasks", 50)?;
+    let nodes = flag_usize(flags, "nodes", 50)?;
+    let gpu_name = flags.get("gpu").map(String::as_str).unwrap_or("RTX 3080");
+    let gpu = lookup(gpu_name).ok_or_else(|| anyhow!("unknown GPU '{gpu_name}'"))?;
+    let g = model.build_graph();
+    let d = Decomposition::chain_balanced(&g, subtasks);
+    let tasks = sched::build::tasks_from_decomposition(&g, &d, true);
+    let peers = sched::build::uniform_peers(gpu, 0.5, nodes);
+    let s = sched::schedule(&tasks, &peers)?;
+    println!(
+        "{} sub-tasks over {}×{} | makespan {} | load spread {:.1}%",
+        subtasks,
+        nodes,
+        gpu.name,
+        human_secs(s.makespan()),
+        100.0 * (s.makespan() - s.loads.iter().cloned().fold(f64::INFINITY, f64::min))
+            / s.makespan()
+    );
+    Ok(())
+}
+
+/// `info`: Table 1 + Figure 1 summaries.
+fn cmd_info() -> Result<()> {
+    let mut t = Table::new(&["GPU", "TFLOPS (FP32)", "TFLOPS (Tensor)", "Memory", "Level", "Price"]);
+    for g in GPU_DB {
+        t.row(&[
+            g.name.to_string(),
+            format!("{:.2}", g.tflops_fp32),
+            format!("{:.2}", g.tflops_tensor),
+            format!("{:.0} GB", g.memory_gb),
+            g.level.to_string(),
+            format!("${:.0}", g.price_usd),
+        ]);
+    }
+    t.print();
+    let (model_cagr, gpu_cagr) = trends::growth_gap();
+    println!(
+        "\nFigure-1 trend: model-memory CAGR {:.0}%/yr vs GPU-memory CAGR {:.0}%/yr",
+        model_cagr * 100.0,
+        gpu_cagr * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Metrics: counters, gauges, loss curves and step timing.
+//!
+//! The coordinator emits everything the experiment reports need — the
+//! examples dump these to stdout/CSV and `EXPERIMENTS.md` quotes them.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Sample;
+
+/// Thread-safe registry of named counters/gauges/samples.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    samples: Mutex<BTreeMap<String, Sample>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        self.samples.lock().unwrap().entry(name.to_string()).or_default().add(v);
+    }
+
+    pub fn sample(&self, name: &str) -> Option<Sample> {
+        self.samples.lock().unwrap().get(name).cloned()
+    }
+
+    /// Render everything as a sorted human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge   {k} = {v:.6}\n"));
+        }
+        for (k, s) in self.samples.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "sample  {k}: n={} mean={:.6} p50={:.6} p99={:.6}\n",
+                s.len(),
+                s.mean(),
+                s.median(),
+                s.p99()
+            ));
+        }
+        out
+    }
+}
+
+/// Loss-curve recorder with CSV export (the e2e driver's main artifact).
+#[derive(Debug, Default, Clone)]
+pub struct LossCurve {
+    points: Vec<(usize, f32)>,
+}
+
+impl LossCurve {
+    pub fn new() -> LossCurve {
+        LossCurve::default()
+    }
+    pub fn record(&mut self, step: usize, loss: f32) {
+        self.points.push((step, loss));
+    }
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+    pub fn last(&self) -> Option<(usize, f32)> {
+        self.points.last().copied()
+    }
+    pub fn first(&self) -> Option<(usize, f32)> {
+        self.points.first().copied()
+    }
+
+    /// Mean loss over the last `k` points (smoothing).
+    pub fn tail_mean(&self, k: usize) -> f32 {
+        if self.points.is_empty() {
+            return f32::NAN;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss\n");
+        for (step, loss) in &self.points {
+            s.push_str(&format!("{step},{loss}\n"));
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Scoped wall-clock timer feeding a [`Metrics`] sample.
+pub struct Timer<'a> {
+    metrics: &'a Metrics,
+    name: &'a str,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(metrics: &'a Metrics, name: &'a str) -> Timer<'a> {
+        Timer { metrics, name, start: Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.metrics.observe(self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("msgs", 3);
+        m.inc("msgs", 2);
+        m.set_gauge("loss", 1.5);
+        assert_eq!(m.counter("msgs"), 5);
+        assert_eq!(m.counter("other"), 0);
+        assert_eq!(m.gauge("loss"), Some(1.5));
+    }
+
+    #[test]
+    fn samples_and_report() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64);
+        }
+        let s = m.sample("lat").unwrap();
+        assert_eq!(s.len(), 100);
+        let rep = m.report();
+        assert!(rep.contains("sample  lat"));
+    }
+
+    #[test]
+    fn timer_records() {
+        let m = Metrics::new();
+        {
+            let _t = Timer::start(&m, "op");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let s = m.sample("op").unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(s.mean() >= 0.004);
+    }
+
+    #[test]
+    fn loss_curve_csv() {
+        let mut c = LossCurve::new();
+        c.record(0, 5.0);
+        c.record(10, 3.0);
+        c.record(20, 2.0);
+        assert_eq!(c.first(), Some((0, 5.0)));
+        assert_eq!(c.last(), Some((20, 2.0)));
+        assert!((c.tail_mean(2) - 2.5).abs() < 1e-6);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("step,loss\n"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+}

@@ -1,0 +1,143 @@
+//! The example DAG of paper Figure 3 / Tables 2–3.
+//!
+//! Ten operators: `Input → Conv → Add → {Pool, Multiply} → Concat → Linear →
+//! CrossEntropy(Label)`, with an optimizable leaf `Tensor A` feeding
+//! `Multiply`. The paper partitions it over three compnodes:
+//!
+//! | Subgraph | Compnode | Nodes |
+//! |---|---|---|
+//! | 1 | 1 | Input, Conv, Add, Pool |
+//! | 2 | 2 | Tensor A, Multiply |
+//! | 3 | 3 | Concat, Linear, Label, CrossEntropy |
+//!
+//! [`build`] reproduces the graph (with concrete toy shapes so every shape
+//! rule checks out); [`paper_partition`] returns the exact 3-way split above,
+//! which `benches/table23_dag.rs` uses to regenerate both tables.
+
+use crate::dag::{DType, Graph, NodeId, OpKind, Shape};
+
+/// Concrete shapes for the toy DAG. The paper gives none, so we pick small
+/// ones that satisfy every operator contract (the residual `Add` forces
+/// `out_ch == in_ch`; `Concat` along channels forces equal spatial dims, so
+/// the `Pool` is a 1×1/stride-1 window).
+pub const BATCH: usize = 2;
+pub const CH: usize = 3;
+pub const HW: usize = 8;
+pub const CLASSES: usize = 10;
+
+/// Build the Figure-3 DAG. Node names match the paper exactly.
+pub fn build() -> Graph {
+    let mut g = Graph::new();
+    let input = g.placeholder("Input", Shape::of(&[BATCH, CH, HW, HW]), DType::F32);
+    let conv = g
+        .op(
+            "Conv",
+            OpKind::Conv2d { in_ch: CH, out_ch: CH, kernel: 3, stride: 1, padding: 1 },
+            &[input],
+        )
+        .unwrap();
+    // Residual connection: Table 2 lists `Add` among Input's users.
+    let add = g.op("Add", OpKind::Add, &[conv, input]).unwrap();
+    let pool = g.op("Pool", OpKind::MaxPool2d { kernel: 1, stride: 1 }, &[add]).unwrap();
+    let tensor_a = g.variable("Tensor A", Shape::of(&[BATCH, CH, HW, HW]));
+    let mult = g.op("Multiply", OpKind::Multiply, &[tensor_a, add]).unwrap();
+    let concat = g.op("Concat", OpKind::Concat { axis: 1 }, &[mult, pool]).unwrap();
+    let linear = g
+        .op("Linear", OpKind::Linear { in_features: HW, out_features: CLASSES, bias: true }, &[concat])
+        .unwrap();
+    let label = g.placeholder("Label", Shape::of(&[BATCH, 2 * CH, HW]), DType::I32);
+    let ce = g.op("CrossEntropy", OpKind::CrossEntropy { weight: 1.0 }, &[label, linear]).unwrap();
+    g.set_kwarg(ce, "weight", "1.0");
+    g
+}
+
+/// The paper's Table-3 partition: node-name → compnode (1-based, as printed).
+pub fn paper_partition(g: &Graph) -> Vec<(NodeId, usize)> {
+    let place = |name: &str| -> usize {
+        match name {
+            "Input" | "Conv" | "Add" | "Pool" => 1,
+            "Tensor A" | "Multiply" => 2,
+            "Concat" | "Linear" | "Label" | "CrossEntropy" => 3,
+            other => panic!("unknown fig3 node {other}"),
+        }
+    };
+    g.nodes.iter().map(|n| (n.id, place(&n.name))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::OpCategory;
+
+    #[test]
+    fn has_ten_ops_matching_table2() {
+        let g = build();
+        assert_eq!(g.len(), 10);
+        for name in
+            ["Input", "Conv", "Add", "Pool", "Tensor A", "Multiply", "Concat", "Linear", "Label", "CrossEntropy"]
+        {
+            assert!(g.by_name(name).is_some(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn categories_match_table2() {
+        let g = build();
+        let cat = |n: &str| g.by_name(n).unwrap().kind.category();
+        assert_eq!(cat("Input"), OpCategory::Placeholder);
+        assert_eq!(cat("Label"), OpCategory::Placeholder);
+        assert_eq!(cat("Conv"), OpCategory::Parametric);
+        assert_eq!(cat("Linear"), OpCategory::Parametric);
+        assert_eq!(cat("Tensor A"), OpCategory::Variable);
+        assert_eq!(cat("Add"), OpCategory::NonParametric);
+        assert_eq!(cat("Pool"), OpCategory::NonParametric);
+        assert_eq!(cat("Multiply"), OpCategory::NonParametric);
+        assert_eq!(cat("Concat"), OpCategory::NonParametric);
+        assert_eq!(cat("CrossEntropy"), OpCategory::Loss);
+    }
+
+    #[test]
+    fn users_match_table2() {
+        let g = build();
+        let users = |n: &str| -> Vec<String> {
+            g.users(g.by_name(n).unwrap().id)
+                .iter()
+                .map(|&u| g.node(u).name.clone())
+                .collect()
+        };
+        assert_eq!(users("Input"), vec!["Conv", "Add"]);
+        assert_eq!(users("Conv"), vec!["Add"]);
+        assert_eq!(users("Add"), vec!["Pool", "Multiply"]);
+        assert_eq!(users("Pool"), vec!["Concat"]);
+        assert_eq!(users("Tensor A"), vec!["Multiply"]);
+        assert_eq!(users("Multiply"), vec!["Concat"]);
+        assert_eq!(users("Concat"), vec!["Linear"]);
+        assert_eq!(users("Linear"), vec!["CrossEntropy"]);
+        assert_eq!(users("Label"), vec!["CrossEntropy"]);
+        assert!(users("CrossEntropy").is_empty());
+    }
+
+    #[test]
+    fn partition_matches_table3() {
+        let g = build();
+        let part = paper_partition(&g);
+        let of = |n: &str| {
+            part.iter().find(|(id, _)| g.node(*id).name == n).unwrap().1
+        };
+        assert_eq!(of("Pool"), 1);
+        assert_eq!(of("Tensor A"), 2);
+        assert_eq!(of("CrossEntropy"), 3);
+    }
+
+    #[test]
+    fn backward_plan_exists() {
+        let g = build();
+        let plan = crate::dag::autodiff::backward_plan(&g);
+        // Conv, Linear, Tensor A participate with param grads.
+        assert!(plan.task(g.by_name("Conv").unwrap().id).unwrap().wants_param_grad);
+        assert!(plan.task(g.by_name("Tensor A").unwrap().id).unwrap().wants_param_grad);
+        // Placeholders don't.
+        assert!(plan.task(g.by_name("Input").unwrap().id).is_none());
+        assert!(plan.task(g.by_name("Label").unwrap().id).is_none());
+    }
+}

@@ -1,0 +1,19 @@
+//! Model zoo: DAG builders for the models used in the paper's evaluation.
+//!
+//! * [`fig3`] — the exact 10-operator example DAG of paper Figure 3 /
+//!   Tables 2–3 (Conv/Add/Pool/Multiply/Concat/Linear/CrossEntropy with an
+//!   optimizable `Tensor A` variable);
+//! * [`transformer`] — fine-grained transformer graphs: **Bert-Large**
+//!   (24 layers, hidden 1024) and the paper's **GPT-3 variant** (24 layers,
+//!   hidden 4096), each layer split into an attention block and an FFN block
+//!   exactly as in Figure 4, plus arbitrary custom configs;
+//! * [`transformer::pipeline_graph`] — the coarse `StageCall` representation
+//!   used by the live end-to-end training path, where each stage is backed
+//!   by an AOT-compiled XLA artifact.
+
+pub mod fig3;
+pub mod transformer;
+
+pub use transformer::{
+    bert_large, gpt3_24x4096, pipeline_graph, PipelineSpec, TransformerConfig,
+};

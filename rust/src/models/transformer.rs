@@ -1,0 +1,386 @@
+//! Transformer graph builders (paper §4, Figures 4–6).
+//!
+//! Two granularities:
+//!
+//! 1. **Fine-grained** ([`TransformerConfig::build_graph`]): every layer is
+//!    split into an *attention block* and an *FFN block* exactly as in
+//!    Figure 4 ("There are 24 transformer layers, each of which is split
+//!    into attention block and FFN block"), plus embedding and LM head.
+//!    This is what the decomposer and the analytic performance model consume.
+//! 2. **Coarse** ([`pipeline_graph`]): one [`OpKind::StageCall`] node per
+//!    pipeline stage, each backed by an AOT-compiled XLA artifact. This is
+//!    the live end-to-end training/serving representation.
+
+use crate::dag::{flops, DType, Graph, OpKind, Shape};
+
+/// Structural hyperparameters of a decoder-only / encoder transformer.
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub layers: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub ffn_hidden: usize,
+    pub causal: bool,
+    /// Full LM head (`dim → vocab`, GPT-style training/serving) vs a small
+    /// classification pooler (`dim → n_classes`, the BERT inference setting
+    /// of the paper's Figures 4–5 where the sub-DAG inventory is embedding
+    /// + 48 attention/FFN blocks and no vocab-sized projection).
+    pub lm_head: bool,
+}
+
+impl TransformerConfig {
+    /// Bert-Large: 24 layers, hidden 1024, 16 heads, FFN 4096 (paper Fig. 4/5).
+    pub fn bert_large() -> Self {
+        TransformerConfig {
+            name: "bert-large".into(),
+            vocab: 30522,
+            seq: 512,
+            batch: 8,
+            layers: 24,
+            dim: 1024,
+            heads: 16,
+            ffn_hidden: 4096,
+            causal: false,
+            lm_head: false,
+        }
+    }
+
+    /// The paper's GPT-3 variant: "24 layers with the hidden size of 4096"
+    /// (Figure 6). Heads/FFN follow the GPT-3 architecture family ratios.
+    pub fn gpt3_24x4096() -> Self {
+        TransformerConfig {
+            name: "gpt3-24x4096".into(),
+            vocab: 50257,
+            seq: 2048,
+            batch: 1,
+            layers: 24,
+            dim: 4096,
+            heads: 32,
+            ffn_hidden: 16384,
+            causal: true,
+            lm_head: false,
+        }
+    }
+
+    /// ~110M-parameter GPT used by the live end-to-end example
+    /// (`examples/train_pipeline.rs`), sized to what a CPU PJRT backend can
+    /// train for a few hundred steps.
+    pub fn gpt_e2e() -> Self {
+        TransformerConfig {
+            name: "gpt-e2e".into(),
+            vocab: 16384,
+            seq: 128,
+            batch: 8,
+            layers: 12,
+            dim: 768,
+            heads: 12,
+            ffn_hidden: 3072,
+            causal: true,
+            lm_head: true,
+        }
+    }
+
+    /// Tiny config for unit/integration tests and the quickstart.
+    pub fn tiny() -> Self {
+        TransformerConfig {
+            name: "gpt-tiny".into(),
+            vocab: 256,
+            seq: 16,
+            batch: 2,
+            layers: 2,
+            dim: 32,
+            heads: 2,
+            ffn_hidden: 64,
+            causal: true,
+            lm_head: true,
+        }
+    }
+
+    /// Output projection width: vocab for LM heads, 2 classes for the
+    /// BERT-style pooler.
+    pub fn head_width(&self) -> usize {
+        if self.lm_head {
+            self.vocab
+        } else {
+            2
+        }
+    }
+
+    /// Trainable parameter count of the full model (matches
+    /// [`Self::build_graph`] exactly; the L2 jax model adds a `seq×dim`
+    /// positional embedding — ~0.4% — accounted through the artifact
+    /// manifest, not here).
+    pub fn param_count(&self) -> u64 {
+        let per_layer = 2 * (2 * self.dim) as u64            // two LayerNorms
+            + (4 * self.dim * self.dim + 4 * self.dim) as u64 // attention
+            + (2 * self.dim * self.ffn_hidden + self.dim + self.ffn_hidden) as u64; // ffn
+        let embed = (self.vocab * self.dim) as u64;
+        let head =
+            (2 * self.dim) as u64 + (self.dim * self.head_width() + self.head_width()) as u64;
+        embed + self.layers as u64 * per_layer + head
+    }
+
+    /// Build the fine-grained FP graph: embedding → 24×(attn block + ffn
+    /// block) → final LN → LM head → cross-entropy.
+    ///
+    /// Block structure is pre-LN: `x + Attn(LN(x))`, `x + FFN(LN(x))`.
+    pub fn build_graph(&self) -> Graph {
+        let mut g = Graph::new();
+        let tokens = g.placeholder("tokens", Shape::of(&[self.batch, self.seq]), DType::I32);
+        let labels = g.placeholder("labels", Shape::of(&[self.batch, self.seq]), DType::I32);
+        let mut h = g
+            .op("embed", OpKind::Embedding { vocab: self.vocab, dim: self.dim }, &[tokens])
+            .unwrap();
+        for l in 0..self.layers {
+            let ln1 = g
+                .op(&format!("layer{l}.ln1"), OpKind::LayerNorm { dim: self.dim }, &[h])
+                .unwrap();
+            let attn = g
+                .op(
+                    &format!("layer{l}.attn"),
+                    OpKind::Attention { heads: self.heads, dim: self.dim, causal: self.causal },
+                    &[ln1],
+                )
+                .unwrap();
+            let res1 = g.op(&format!("layer{l}.res1"), OpKind::Add, &[h, attn]).unwrap();
+            let ln2 = g
+                .op(&format!("layer{l}.ln2"), OpKind::LayerNorm { dim: self.dim }, &[res1])
+                .unwrap();
+            let ffn = g
+                .op(
+                    &format!("layer{l}.ffn"),
+                    OpKind::FeedForward { dim: self.dim, hidden: self.ffn_hidden },
+                    &[ln2],
+                )
+                .unwrap();
+            h = g.op(&format!("layer{l}.res2"), OpKind::Add, &[res1, ffn]).unwrap();
+        }
+        let lnf = g.op("ln_f", OpKind::LayerNorm { dim: self.dim }, &[h]).unwrap();
+        let logits = g
+            .op(
+                "lm_head",
+                OpKind::Linear {
+                    in_features: self.dim,
+                    out_features: self.head_width(),
+                    bias: true,
+                },
+                &[lnf],
+            )
+            .unwrap();
+        g.op("loss", OpKind::CrossEntropy { weight: 1.0 }, &[labels, logits]).unwrap();
+        g
+    }
+}
+
+/// Convenience constructors matching the paper's two evaluation models.
+pub fn bert_large() -> Graph {
+    TransformerConfig::bert_large().build_graph()
+}
+pub fn gpt3_24x4096() -> Graph {
+    TransformerConfig::gpt3_24x4096().build_graph()
+}
+
+/// A coarse pipeline split of a transformer: how many `StageCall` nodes and
+/// how many layers each holds.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub config: TransformerConfig,
+    /// Number of transformer-block stages (embedding and head are separate
+    /// stages around them).
+    pub block_stages: usize,
+}
+
+impl PipelineSpec {
+    pub fn new(config: TransformerConfig, block_stages: usize) -> Self {
+        assert!(block_stages > 0 && config.layers % block_stages == 0,
+            "layers {} must divide evenly into {} stages", config.layers, block_stages);
+        PipelineSpec { config, block_stages }
+    }
+
+    pub fn layers_per_stage(&self) -> usize {
+        self.config.layers / self.block_stages
+    }
+
+    /// Total number of stages (embed + blocks + head).
+    pub fn num_stages(&self) -> usize {
+        self.block_stages + 2
+    }
+}
+
+/// Build the coarse `StageCall` graph for the live pipeline: one node per
+/// stage with FLOPs/params pre-computed from an equivalent fine-grained
+/// graph, so the scheduler and perf model treat it identically.
+pub fn pipeline_graph(spec: &PipelineSpec) -> Graph {
+    let c = &spec.config;
+    let mut g = Graph::new();
+    let act_shape = Shape::of(&[c.batch, c.seq, c.dim]);
+    let tokens = g.placeholder("tokens", Shape::of(&[c.batch, c.seq]), DType::I32);
+    let labels = g.placeholder("labels", Shape::of(&[c.batch, c.seq]), DType::I32);
+
+    // Cost model: reuse the fine-grained per-op FLOP counters.
+    let fine = c.build_graph();
+    let layer_fwd_flops = |l: usize| -> f64 {
+        fine.nodes
+            .iter()
+            .filter(|n| n.name.starts_with(&format!("layer{l}.")))
+            .map(flops::fwd_flops)
+            .sum()
+    };
+    let layer_params = |l: usize| -> usize {
+        fine.nodes
+            .iter()
+            .filter(|n| n.name.starts_with(&format!("layer{l}.")))
+            .map(flops::param_count)
+            .sum()
+    };
+
+    let embed_params = c.vocab * c.dim;
+    let embed = g
+        .op(
+            "stage.embed",
+            OpKind::StageCall {
+                stage: "embed".into(),
+                param_count: embed_params,
+                flops: (c.batch * c.seq * c.dim) as f64,
+                param_bytes: embed_params as u64 * 4,
+            },
+            &[tokens],
+        )
+        .unwrap();
+    g.set_shape(embed, act_shape.clone(), DType::F32);
+
+    let mut h = embed;
+    let lps = spec.layers_per_stage();
+    for s in 0..spec.block_stages {
+        let lo = s * lps;
+        let hi = lo + lps;
+        let fl: f64 = (lo..hi).map(layer_fwd_flops).sum();
+        let pc: usize = (lo..hi).map(layer_params).sum();
+        let node = g
+            .op(
+                &format!("stage.block{s}"),
+                OpKind::StageCall {
+                    stage: format!("block{s}"),
+                    param_count: pc,
+                    flops: fl,
+                    param_bytes: pc as u64 * 4,
+                },
+                &[h],
+            )
+            .unwrap();
+        g.set_shape(node, act_shape.clone(), DType::F32);
+        h = node;
+    }
+
+    let head_params = 2 * c.dim + c.dim * c.head_width() + c.head_width();
+    let head_flops = fine
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.name.as_str(), "ln_f" | "lm_head" | "loss"))
+        .map(flops::fwd_flops)
+        .sum();
+    let head = g
+        .op(
+            "stage.head",
+            OpKind::StageCall {
+                stage: "head".into(),
+                param_count: head_params,
+                flops: head_flops,
+                param_bytes: head_params as u64 * 4,
+            },
+            &[h],
+        )
+        .unwrap();
+    g.set_shape(head, Shape::scalar(), DType::F32);
+    // The head also consumes labels; model as an extra edge.
+    g.nodes[head].args.push(labels);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_large_structure() {
+        let g = bert_large();
+        // embed + 24×6 ops + ln_f + head + loss + 2 placeholders
+        assert_eq!(g.len(), 2 + 1 + 24 * 6 + 3);
+        assert!(g.by_name("layer23.ffn").is_some());
+        assert!(g.topo_order().is_ok());
+    }
+
+    #[test]
+    fn bert_large_param_count_plausible() {
+        // Bert-Large is ~340M params (ours differs slightly: learned pos-emb
+        // + untied LM head). Accept 300–420M.
+        let c = TransformerConfig::bert_large();
+        let p = c.param_count();
+        assert!(p > 300_000_000 && p < 420_000_000, "params {p}");
+        // graph-level accounting must agree with the closed form
+        let g = c.build_graph();
+        assert_eq!(g.param_count(), p);
+    }
+
+    #[test]
+    fn gpt3_variant_params() {
+        // 24 layers × ~201M/layer + embeddings ≈ 5B-ish; just sanity-band it.
+        let c = TransformerConfig::gpt3_24x4096();
+        let p = c.param_count();
+        assert!(p > 4_000_000_000 && p < 6_000_000_000, "params {p}");
+    }
+
+    #[test]
+    fn e2e_preset_is_about_100m() {
+        let p = TransformerConfig::gpt_e2e().param_count();
+        assert!(p > 90_000_000 && p < 140_000_000, "params {p}");
+    }
+
+    #[test]
+    fn fwd_flops_scale_with_layers() {
+        let mut small = TransformerConfig::tiny();
+        let mut big = TransformerConfig::tiny();
+        small.layers = 2;
+        big.layers = 4;
+        let f_small = small.build_graph().total_fwd_flops();
+        let f_big = big.build_graph().total_fwd_flops();
+        assert!(f_big > 1.5 * f_small);
+    }
+
+    #[test]
+    fn pipeline_graph_costs_match_fine_graph() {
+        let c = TransformerConfig::tiny();
+        let fine = c.build_graph();
+        let spec = PipelineSpec::new(c, 2);
+        let coarse = pipeline_graph(&spec);
+        assert_eq!(coarse.len(), 2 + spec.num_stages());
+        // Params must match exactly (same closed forms).
+        assert_eq!(coarse.param_count(), fine.param_count());
+        // FLOPs: coarse embed stage is approximated; require within 2%.
+        let ratio = coarse.total_fwd_flops() / fine.total_fwd_flops();
+        assert!((ratio - 1.0).abs() < 0.02, "flops ratio {ratio}");
+    }
+
+    #[test]
+    fn pipeline_spec_validates_divisibility() {
+        let c = TransformerConfig::tiny(); // 2 layers
+        assert_eq!(PipelineSpec::new(c.clone(), 2).layers_per_stage(), 1);
+        let result = std::panic::catch_unwind(|| PipelineSpec::new(c, 3));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn fig4_blocks_are_separable() {
+        // Figure 4 splits each layer into attention + FFN blocks; verify the
+        // graph exposes them as distinct nodes with distinct costs.
+        let g = TransformerConfig::bert_large().build_graph();
+        let attn = g.by_name("layer0.attn").unwrap();
+        let ffn = g.by_name("layer0.ffn").unwrap();
+        assert!(crate::dag::flops::fwd_flops(attn) > 0.0);
+        assert!(crate::dag::flops::fwd_flops(ffn) > 0.0);
+    }
+}

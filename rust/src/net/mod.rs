@@ -1,0 +1,176 @@
+//! Simulated wide-area network between compnodes.
+//!
+//! The paper's testbed is consumer devices connected over the Internet; our
+//! substitute (DESIGN.md §5) is an in-process network with per-pair α-β
+//! links ([`crate::perf::comm::LinkModel`]). The simulator supports two
+//! clocks:
+//!
+//! * **virtual time** — `delay()` returns the modelled seconds; schedulers
+//!   and benches accumulate them without sleeping;
+//! * **scaled real time** — the live cluster multiplies modelled delay by
+//!   `time_scale` and actually sleeps, so churn/heartbeat interleavings are
+//!   exercised for real while keeping wall-clock budgets small.
+//!
+//! All traffic is accounted per link for the experiment reports.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::perf::comm::LinkModel;
+
+/// Node address in the simulated network (same id space as compnodes).
+pub type Addr = usize;
+
+/// Static topology: explicit per-pair links with a default fallback.
+#[derive(Debug)]
+pub struct Topology {
+    default: LinkModel,
+    links: HashMap<(Addr, Addr), LinkModel>,
+    /// Self-loop model (local message passing — "gray lines" of Fig. 3).
+    local: LinkModel,
+}
+
+impl Topology {
+    pub fn uniform(default: LinkModel) -> Topology {
+        Topology { default, links: HashMap::new(), local: LinkModel::local() }
+    }
+
+    /// Set a specific directed link.
+    pub fn set_link(&mut self, from: Addr, to: Addr, link: LinkModel) {
+        self.links.insert((from, to), link);
+    }
+
+    /// Set a symmetric link.
+    pub fn set_link_sym(&mut self, a: Addr, b: Addr, link: LinkModel) {
+        self.links.insert((a, b), link);
+        self.links.insert((b, a), link);
+    }
+
+    pub fn link(&self, from: Addr, to: Addr) -> LinkModel {
+        if from == to {
+            return self.local;
+        }
+        *self.links.get(&(from, to)).unwrap_or(&self.default)
+    }
+}
+
+/// Per-link traffic counters.
+#[derive(Debug, Default, Clone)]
+pub struct LinkStats {
+    pub messages: u64,
+    pub bytes: u64,
+    pub model_seconds: f64,
+}
+
+/// The network simulator: topology + accounting + clock policy.
+pub struct NetworkSim {
+    topo: Topology,
+    stats: Mutex<HashMap<(Addr, Addr), LinkStats>>,
+    /// Multiplier from modelled seconds to real sleep. 0 disables sleeping.
+    time_scale: f64,
+}
+
+impl NetworkSim {
+    pub fn new(topo: Topology, time_scale: f64) -> NetworkSim {
+        NetworkSim { topo, stats: Mutex::new(HashMap::new()), time_scale }
+    }
+
+    /// Modelled transfer seconds for `bytes` from→to, with accounting.
+    pub fn delay(&self, from: Addr, to: Addr, bytes: u64) -> f64 {
+        let t = self.topo.link(from, to).time(bytes);
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry((from, to)).or_default();
+        e.messages += 1;
+        e.bytes += bytes;
+        e.model_seconds += t;
+        t
+    }
+
+    /// Like [`delay`](Self::delay) but also sleeps `time_scale × t` (live
+    /// cluster mode).
+    pub fn transfer(&self, from: Addr, to: Addr, bytes: u64) -> f64 {
+        let t = self.delay(from, to, bytes);
+        if self.time_scale > 0.0 && t > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(t * self.time_scale));
+        }
+        t
+    }
+
+    pub fn link(&self, from: Addr, to: Addr) -> LinkModel {
+        self.topo.link(from, to)
+    }
+
+    /// Snapshot of all per-link stats.
+    pub fn stats(&self) -> HashMap<(Addr, Addr), LinkStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Total bytes moved across remote links.
+    pub fn total_remote_bytes(&self) -> u64 {
+        self.stats
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((f, t), _)| f != t)
+            .map(|(_, s)| s.bytes)
+            .sum()
+    }
+
+    /// Total modelled seconds across remote links.
+    pub fn total_remote_seconds(&self) -> f64 {
+        self.stats
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((f, t), _)| f != t)
+            .map(|(_, s)| s.model_seconds)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_and_specific_links() {
+        let mut topo = Topology::uniform(LinkModel::from_ms_mbps(10.0, 100.0));
+        topo.set_link_sym(0, 1, LinkModel::from_ms_mbps(1.0, 1000.0));
+        assert!(topo.link(0, 1).alpha < topo.link(0, 2).alpha);
+        assert_eq!(topo.link(0, 1).alpha, topo.link(1, 0).alpha);
+        // local is free
+        assert_eq!(topo.link(3, 3).time(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn accounting() {
+        let sim = NetworkSim::new(Topology::uniform(LinkModel::from_ms_mbps(10.0, 100.0)), 0.0);
+        sim.delay(0, 1, 1000);
+        sim.delay(0, 1, 2000);
+        sim.delay(2, 2, 500); // local, excluded from remote totals
+        assert_eq!(sim.total_remote_bytes(), 3000);
+        let stats = sim.stats();
+        assert_eq!(stats[&(0, 1)].messages, 2);
+        assert!(sim.total_remote_seconds() > 0.02);
+    }
+
+    #[test]
+    fn delay_matches_link_model() {
+        let link = LinkModel::from_ms_mbps(5.0, 50.0);
+        let sim = NetworkSim::new(Topology::uniform(link), 0.0);
+        let t = sim.delay(0, 1, 1_000_000);
+        assert!((t - link.time(1_000_000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_sleep_is_bounded() {
+        // With a tiny scale, transfer() should return quickly but still
+        // account full modelled time.
+        let sim =
+            NetworkSim::new(Topology::uniform(LinkModel::from_ms_mbps(100.0, 1.0)), 1e-6);
+        let start = std::time::Instant::now();
+        let t = sim.transfer(0, 1, 10_000_000);
+        assert!(t > 1.0, "modelled {t}");
+        assert!(start.elapsed().as_secs_f64() < 0.5);
+    }
+}

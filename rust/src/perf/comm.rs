@@ -1,0 +1,113 @@
+//! The α-β communication model (paper §3.3):
+//! `T_comm^{ij}(M) = α^{ij} + β^{ij} · M`
+//! where `α` is link latency (s), `β` the inverse bandwidth (s/byte) and `M`
+//! the message size in bytes.
+//!
+//! [`LinkModel::fit`] recovers `(α, β)` from measured (size, time) pairs by
+//! least squares — the "short period of profiling to fit a few parameters"
+//! of §3.7, applied to links.
+
+use crate::util::stats::linfit;
+
+/// One directed link's α-β parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Latency in seconds.
+    pub alpha: f64,
+    /// Inverse bandwidth in seconds per byte.
+    pub beta: f64,
+}
+
+impl LinkModel {
+    /// From latency (seconds) + bandwidth (bytes/sec).
+    pub fn new(alpha_s: f64, bandwidth_bps: f64) -> LinkModel {
+        LinkModel { alpha: alpha_s, beta: 1.0 / bandwidth_bps }
+    }
+
+    /// Convenience: latency in ms, bandwidth in Mbit/s (the units of the
+    /// paper's Figure 5/6 sweeps).
+    pub fn from_ms_mbps(alpha_ms: f64, mbps: f64) -> LinkModel {
+        LinkModel::new(alpha_ms * 1e-3, mbps * 1e6 / 8.0)
+    }
+
+    /// Loopback/local: effectively free (the paper drops R(Pa(f)) when
+    /// producer and consumer share a device).
+    pub fn local() -> LinkModel {
+        LinkModel { alpha: 0.0, beta: 0.0 }
+    }
+
+    /// A typical datacenter NVLink-class link (used for the H100 baseline):
+    /// ~5 µs latency, 400 Gbit/s effective.
+    pub fn datacenter() -> LinkModel {
+        LinkModel::new(5e-6, 400e9 / 8.0)
+    }
+
+    /// A typical consumer broadband WAN link: 20 ms, 100 Mbit/s.
+    pub fn consumer_wan() -> LinkModel {
+        LinkModel::from_ms_mbps(20.0, 100.0)
+    }
+
+    /// Predicted transfer time for `bytes`.
+    pub fn time(&self, bytes: u64) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+
+    /// Bandwidth in bytes/sec.
+    pub fn bandwidth(&self) -> f64 {
+        if self.beta == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.beta
+        }
+    }
+
+    /// Least-squares fit from `(message_bytes, seconds)` measurements.
+    /// Negative fitted parameters are clamped to 0 (noise on tiny samples).
+    pub fn fit(samples: &[(u64, f64)]) -> LinkModel {
+        let xs: Vec<f64> = samples.iter().map(|&(m, _)| m as f64).collect();
+        let ys: Vec<f64> = samples.iter().map(|&(_, t)| t).collect();
+        let (a, b) = linfit(&xs, &ys);
+        LinkModel { alpha: a.max(0.0), beta: b.max(0.0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_is_affine() {
+        let l = LinkModel::new(0.01, 1_000_000.0);
+        assert!((l.time(0) - 0.01).abs() < 1e-12);
+        assert!((l.time(1_000_000) - 1.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mbps_conversion() {
+        // 100 Mbit/s = 12.5 MB/s; 12.5 MB should take ~1 s + latency.
+        let l = LinkModel::from_ms_mbps(10.0, 100.0);
+        let t = l.time(12_500_000);
+        assert!((t - 1.01).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let truth = LinkModel::new(0.02, 50e6);
+        let samples: Vec<(u64, f64)> =
+            [1_000u64, 100_000, 1_000_000, 10_000_000].iter().map(|&m| (m, truth.time(m))).collect();
+        let fitted = LinkModel::fit(&samples);
+        assert!((fitted.alpha - truth.alpha).abs() < 1e-9);
+        assert!((fitted.beta - truth.beta).abs() < 1e-15);
+    }
+
+    #[test]
+    fn local_is_free() {
+        assert_eq!(LinkModel::local().time(u64::MAX / 2), 0.0);
+    }
+
+    #[test]
+    fn wan_slower_than_datacenter() {
+        let m = 10_000_000u64;
+        assert!(LinkModel::consumer_wan().time(m) > 100.0 * LinkModel::datacenter().time(m));
+    }
+}

@@ -1,0 +1,131 @@
+//! Energy & carbon accounting (paper §2.8).
+//!
+//! "The energy consumption of high-end GPUs has become a bottleneck for
+//! training large models. In contrast, our proposed FusionAI can address
+//! this bottleneck by providing feasibility in terms of power consumption."
+//!
+//! A simple but standard estimator: `E = Σ_devices TDP · utilization · T`,
+//! with utilization split between the compute-busy fraction (the Eq.-4
+//! steady-state duty cycle of each stage) and an idle floor. This is the
+//! model behind the energy columns of `examples/estimate_cluster.rs`.
+
+use crate::pipeline::analytics::PipelineEstimate;
+
+/// Board power (W) for the devices in the GPU database.
+pub fn tdp_watts(gpu_name: &str) -> f64 {
+    match gpu_name {
+        "RTX 4090" => 450.0,
+        "RTX 4080" => 320.0,
+        "RTX 3090" => 350.0,
+        "RTX 3080" => 320.0,
+        "RTX 3070" => 220.0,
+        "RTX 3060" => 170.0,
+        "GTX 1080 Ti" => 250.0,
+        "H100" => 700.0,
+        "A100" => 400.0,
+        "V100" => 300.0,
+        _ => 300.0,
+    }
+}
+
+/// Idle power as a fraction of TDP (consumer boards idle low; datacenter
+/// boards in a loaded chassis less so).
+pub const IDLE_FRACTION: f64 = 0.1;
+
+/// Energy estimate for one pipelined run.
+#[derive(Debug, Clone)]
+pub struct EnergyEstimate {
+    /// Joules consumed across the fleet.
+    pub joules: f64,
+    /// kWh, for humans.
+    pub kwh: f64,
+    /// Mean per-device duty cycle (busy fraction).
+    pub duty_cycle: f64,
+}
+
+/// Estimate fleet energy for processing `n_b` batches on a pipeline whose
+/// per-stage costs come from the §4 analytic model. A device draws full
+/// TDP only while *computing* (`C_p` per batch); waiting on the network
+/// draws the idle floor — which is exactly why a comm-bound fleet has an
+/// abysmal duty cycle.
+pub fn pipeline_energy(
+    est: &PipelineEstimate,
+    tdps: &[f64],
+    n_b: usize,
+) -> EnergyEstimate {
+    assert_eq!(est.stages.len(), tdps.len());
+    let wall = est.pipelined_time(n_b);
+    let mut joules = 0.0;
+    let mut duty_sum = 0.0;
+    for (s, &tdp) in est.stages.iter().zip(tdps) {
+        // Device computes n_b times for C_p each.
+        let busy = (n_b as f64 * s.compute_s).min(wall);
+        let idle = wall - busy;
+        joules += tdp * busy + IDLE_FRACTION * tdp * idle;
+        duty_sum += busy / wall;
+    }
+    EnergyEstimate {
+        joules,
+        kwh: joules / 3.6e6,
+        duty_cycle: duty_sum / est.stages.len() as f64,
+    }
+}
+
+/// Grid carbon intensity (kg CO₂e per kWh) presets.
+pub fn carbon_kg(kwh: f64, intensity_kg_per_kwh: f64) -> f64 {
+    kwh * intensity_kg_per_kwh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::Decomposition;
+    use crate::models::transformer::TransformerConfig;
+    use crate::perf::comm::LinkModel;
+    use crate::perf::gpus::lookup;
+    use crate::perf::paleo::{DeviceProfile, PaleoModel};
+
+    fn est(n: usize, gpu: &str, link: LinkModel) -> PipelineEstimate {
+        let g = TransformerConfig::bert_large().build_graph();
+        let d = Decomposition::chain_balanced(&g, n);
+        let models: Vec<PaleoModel> = (0..n)
+            .map(|_| PaleoModel::new(DeviceProfile::with_lambda(lookup(gpu).unwrap(), 0.5)))
+            .collect();
+        PipelineEstimate::from_decomposition(&g, &d, &models, link, false)
+    }
+
+    #[test]
+    fn known_tdps() {
+        assert_eq!(tdp_watts("H100"), 700.0);
+        assert_eq!(tdp_watts("RTX 3080"), 320.0);
+        assert_eq!(tdp_watts("something else"), 300.0);
+    }
+
+    #[test]
+    fn energy_scales_with_batches() {
+        let e = est(4, "H100", LinkModel::datacenter());
+        let tdps = vec![700.0; 4];
+        let e1 = pipeline_energy(&e, &tdps, 64);
+        let e2 = pipeline_energy(&e, &tdps, 512);
+        assert!(e2.joules > 6.0 * e1.joules, "{} vs {}", e2.joules, e1.joules);
+        assert!(e1.duty_cycle > 0.0 && e1.duty_cycle <= 1.0);
+    }
+
+    #[test]
+    fn comm_bound_fleet_wastes_energy_idling() {
+        // At 100 Mbps, the consumer fleet's devices idle most of the time —
+        // low duty cycle, poor joules-per-batch vs the compute-bound H100s.
+        let consumer = est(50, "RTX 3080", LinkModel::from_ms_mbps(10.0, 100.0));
+        let dc = est(4, "H100", LinkModel::datacenter());
+        let ec = pipeline_energy(&consumer, &vec![320.0; 50], 512);
+        let ed = pipeline_energy(&dc, &vec![700.0; 4], 512);
+        assert!(ec.duty_cycle < 0.2, "duty {}", ec.duty_cycle);
+        // Joules per batch: consumer fleet is far worse when comm-bound.
+        assert!(ec.joules / 512.0 > 5.0 * ed.joules / 512.0);
+    }
+
+    #[test]
+    fn carbon_conversion() {
+        assert!((carbon_kg(10.0, 0.4) - 4.0).abs() < 1e-12);
+    }
+}

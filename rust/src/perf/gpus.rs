@@ -1,0 +1,114 @@
+//! GPU specification database (paper Table 1, extended).
+//!
+//! FLOPS figures are the vendor peak numbers the paper quotes; the paper's
+//! throughput estimates use the **FP32 Tensor Core** column ("We coarsely
+//! estimate the computation time C_p based on FLOPs of sub-DAGs and TFLOPS
+//! (FP32 Tensor Core) of GPUs", §4).
+
+/// Market segment of a device (paper Table 1 "Level").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuLevel {
+    Consumer,
+    DataCenter,
+}
+
+impl std::fmt::Display for GpuLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GpuLevel::Consumer => write!(f, "Consumer"),
+            GpuLevel::DataCenter => write!(f, "Data Center"),
+        }
+    }
+}
+
+/// One GPU's static specification.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak FP32 (CUDA-core) TFLOPS.
+    pub tflops_fp32: f64,
+    /// Peak FP32 Tensor-Core (TF32) TFLOPS — the column the paper's estimate
+    /// uses.
+    pub tflops_tensor: f64,
+    /// Device memory in GiB.
+    pub memory_gb: f64,
+    pub level: GpuLevel,
+    /// Approximate launch-year street price in USD (used by the
+    /// cost-efficiency analysis in `examples/estimate_cluster.rs`; the paper
+    /// argues 50×3080 is "much lower price" than 4×H100).
+    pub price_usd: f64,
+}
+
+impl GpuSpec {
+    /// Peak tensor FLOPS in FLOP/s (not TFLOPS).
+    pub fn peak_tensor_flops(&self) -> f64 {
+        self.tflops_tensor * 1e12
+    }
+    /// Peak FP32 FLOPS in FLOP/s.
+    pub fn peak_fp32_flops(&self) -> f64 {
+        self.tflops_fp32 * 1e12
+    }
+    /// Device memory in bytes.
+    pub fn memory_bytes(&self) -> u64 {
+        (self.memory_gb * 1024.0 * 1024.0 * 1024.0) as u64
+    }
+}
+
+/// The database. The first five rows are exactly paper Table 1.
+pub static GPU_DB: &[GpuSpec] = &[
+    GpuSpec { name: "RTX 4090", tflops_fp32: 82.58, tflops_tensor: 82.58, memory_gb: 24.0, level: GpuLevel::Consumer, price_usd: 1599.0 },
+    GpuSpec { name: "RTX 4080", tflops_fp32: 48.74, tflops_tensor: 97.5, memory_gb: 16.0, level: GpuLevel::Consumer, price_usd: 1199.0 },
+    GpuSpec { name: "RTX 3080", tflops_fp32: 29.77, tflops_tensor: 59.5, memory_gb: 10.0, level: GpuLevel::Consumer, price_usd: 699.0 },
+    GpuSpec { name: "H100", tflops_fp32: 51.22, tflops_tensor: 756.0, memory_gb: 80.0, level: GpuLevel::DataCenter, price_usd: 30000.0 },
+    GpuSpec { name: "A100", tflops_fp32: 19.49, tflops_tensor: 155.92, memory_gb: 80.0, level: GpuLevel::DataCenter, price_usd: 15000.0 },
+    // Referenced elsewhere in the paper / useful for heterogeneous fleets.
+    GpuSpec { name: "V100", tflops_fp32: 14.13, tflops_tensor: 112.0, memory_gb: 32.0, level: GpuLevel::DataCenter, price_usd: 10000.0 },
+    GpuSpec { name: "RTX 3090", tflops_fp32: 35.58, tflops_tensor: 71.0, memory_gb: 24.0, level: GpuLevel::Consumer, price_usd: 1499.0 },
+    GpuSpec { name: "RTX 3070", tflops_fp32: 20.31, tflops_tensor: 40.6, memory_gb: 8.0, level: GpuLevel::Consumer, price_usd: 499.0 },
+    GpuSpec { name: "RTX 3060", tflops_fp32: 12.74, tflops_tensor: 25.4, memory_gb: 12.0, level: GpuLevel::Consumer, price_usd: 329.0 },
+    GpuSpec { name: "GTX 1080 Ti", tflops_fp32: 11.34, tflops_tensor: 11.34, memory_gb: 11.0, level: GpuLevel::Consumer, price_usd: 699.0 },
+];
+
+/// Look a GPU up by (case-insensitive) name.
+pub fn lookup(name: &str) -> Option<&'static GpuSpec> {
+    let want = name.to_ascii_lowercase();
+    GPU_DB.iter().find(|g| g.name.to_ascii_lowercase() == want)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_present() {
+        for name in ["RTX 4090", "RTX 4080", "RTX 3080", "H100", "A100"] {
+            assert!(lookup(name).is_some(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn table1_values_exact() {
+        let g3080 = lookup("rtx 3080").unwrap();
+        assert_eq!(g3080.tflops_fp32, 29.77);
+        assert_eq!(g3080.tflops_tensor, 59.5);
+        assert_eq!(g3080.memory_gb, 10.0);
+        assert_eq!(g3080.level, GpuLevel::Consumer);
+        let h100 = lookup("H100").unwrap();
+        assert_eq!(h100.tflops_tensor, 756.0);
+        assert_eq!(h100.level, GpuLevel::DataCenter);
+    }
+
+    #[test]
+    fn headline_flops_ratio() {
+        // The paper's headline: 50×3080 ≈ 4×H100 in aggregate tensor FLOPS.
+        let r3080 = lookup("RTX 3080").unwrap().peak_tensor_flops();
+        let h100 = lookup("H100").unwrap().peak_tensor_flops();
+        let ratio = (50.0 * r3080) / (4.0 * h100);
+        assert!((0.9..1.1).contains(&ratio), "aggregate ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_bytes() {
+        assert_eq!(lookup("H100").unwrap().memory_bytes(), 80 * 1024 * 1024 * 1024);
+    }
+}

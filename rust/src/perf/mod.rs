@@ -1,0 +1,19 @@
+//! Analytic hardware performance modeling (paper §3.7 & §4).
+//!
+//! * [`gpus`] — the GPU spec database (paper Table 1 plus the other devices
+//!   referenced in the text);
+//! * [`paleo`] — the PALEO-style per-operator time model
+//!   `T(f,p) = R(Pa(f)) + C(f,p) + W(f,p)` with the regression-fitted
+//!   scaling-down factor `λ_p` so that `S(p) = λ_p · S*(p)`;
+//! * [`comm`] — the α-β communication model `T = α + β·M` and link fitting;
+//! * [`trends`] — the Figure-1 model-vs-GPU memory trend dataset.
+
+pub mod comm;
+pub mod energy;
+pub mod gpus;
+pub mod paleo;
+pub mod trends;
+
+pub use comm::LinkModel;
+pub use gpus::{GpuSpec, GPU_DB};
+pub use paleo::{DeviceProfile, PaleoModel};

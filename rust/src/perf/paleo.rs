@@ -1,0 +1,207 @@
+//! PALEO-style per-operator execution-time model (paper §3.7).
+//!
+//! `T(f, p) = R(Pa(f)) + C(f, p) + W(f, p)` where
+//! * `C(f,p) = FLOPs(f) / S(p)` — compute time,
+//! * `S(p) = λ_p · S*(p)` — achieved speed = scaling-down factor × peak,
+//! * `R(Pa(f))` — time to retrieve inputs from parents (communication when
+//!   the parent lives on another compnode, paper Eq. 1),
+//! * `W(f,p)` — time to write outputs to local memory.
+//!
+//! `λ_p` is fitted by a short profiling run ([`fit_lambda`]), exactly the
+//! "regression-based scaling-down factor" of the paper.
+
+use crate::dag::{flops, Graph, Node, NodeId};
+use crate::perf::comm::LinkModel;
+use crate::perf::gpus::GpuSpec;
+use crate::util::stats::linfit_origin;
+
+/// A device (compnode hardware) as the performance model sees it.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub gpu: GpuSpec,
+    /// Scaling-down factor λ_p ∈ (0, 1]: achieved/peak.
+    pub lambda: f64,
+    /// Effective device-memory bandwidth in bytes/s (for the W term).
+    pub mem_bw: f64,
+}
+
+impl DeviceProfile {
+    /// A device running at a fraction of peak. The paper notes real speed
+    /// "may not reach the peak performance"; 0.3–0.6 is typical for mixed
+    /// transformer workloads.
+    pub fn with_lambda(gpu: &GpuSpec, lambda: f64) -> DeviceProfile {
+        DeviceProfile {
+            gpu: gpu.clone(),
+            lambda,
+            // Rough HBM/GDDR bandwidth proportional to compute class.
+            mem_bw: 0.5e12,
+        }
+    }
+
+    /// Achieved speed S(p) = λ·S*(p) in FLOP/s (tensor-core peak, which is
+    /// what the paper's §4 estimate uses).
+    pub fn achieved_flops(&self) -> f64 {
+        self.lambda * self.gpu.peak_tensor_flops()
+    }
+}
+
+/// The assembled PALEO model for one device.
+#[derive(Debug, Clone)]
+pub struct PaleoModel {
+    pub device: DeviceProfile,
+}
+
+impl PaleoModel {
+    pub fn new(device: DeviceProfile) -> PaleoModel {
+        PaleoModel { device }
+    }
+
+    /// `C(f,p)`: compute time of node `f` (forward).
+    pub fn compute_time(&self, f: &Node) -> f64 {
+        flops::fwd_flops(f) / self.device.achieved_flops()
+    }
+
+    /// `C(f,p)` for the backward task of `f`.
+    pub fn compute_time_bwd(&self, f: &Node) -> f64 {
+        flops::bwd_flops(f) / self.device.achieved_flops()
+    }
+
+    /// `W(f,p)`: write the output activation to local memory.
+    pub fn write_time(&self, f: &Node) -> f64 {
+        flops::activation_bytes(f) as f64 / self.device.mem_bw
+    }
+
+    /// `R(Pa(f))`: retrieve inputs from parents. `remote` gives, per parent,
+    /// the link to cross (None = same compnode → local read, costed at
+    /// memory bandwidth; the paper removes this term entirely for co-located
+    /// parents, and it is indeed negligible).
+    pub fn read_time(&self, g: &Graph, f: &Node, remote: &dyn Fn(NodeId) -> Option<LinkModel>) -> f64 {
+        f.args
+            .iter()
+            .map(|&a| {
+                let bytes = flops::activation_bytes(g.node(a));
+                match remote(a) {
+                    Some(link) => link.time(bytes),
+                    None => bytes as f64 / self.device.mem_bw,
+                }
+            })
+            .sum()
+    }
+
+    /// Full Eq. 1: `T(f,p) = R + C + W` for the forward task.
+    pub fn node_time(
+        &self,
+        g: &Graph,
+        f: NodeId,
+        remote: &dyn Fn(NodeId) -> Option<LinkModel>,
+    ) -> f64 {
+        let node = g.node(f);
+        self.read_time(g, node, remote) + self.compute_time(node) + self.write_time(node)
+    }
+
+    /// Execution time of a whole sub-DAG on this device, assuming serial
+    /// execution of its operators (the paper bounds the true value by
+    /// `[max_i T(fᶦ,p), Σ_i T(fᶦ,p)]`; pipeline-parallel models are
+    /// sequential chains, so the upper bound is exact for them and is what
+    /// §4 uses).
+    pub fn subgraph_time(
+        &self,
+        g: &Graph,
+        nodes: &[NodeId],
+        remote: &dyn Fn(NodeId) -> Option<LinkModel>,
+    ) -> f64 {
+        nodes.iter().map(|&f| self.node_time(g, f, remote)).sum()
+    }
+
+    /// The paper's lower/upper bound interval for a sub-DAG.
+    pub fn subgraph_time_bounds(
+        &self,
+        g: &Graph,
+        nodes: &[NodeId],
+        remote: &dyn Fn(NodeId) -> Option<LinkModel>,
+    ) -> (f64, f64) {
+        let times: Vec<f64> = nodes.iter().map(|&f| self.node_time(g, f, remote)).collect();
+        let max = times.iter().copied().fold(0.0, f64::max);
+        let sum = times.iter().sum();
+        (max, sum)
+    }
+}
+
+/// Fit λ_p from profiling pairs `(work_flops, measured_seconds)`:
+/// measured ≈ work / (λ·S*) ⇒ measured ≈ (1/(λ·S*)) · work, a
+/// through-origin regression on work→time whose slope is `1/(λ·S*)`.
+pub fn fit_lambda(peak_flops: f64, samples: &[(f64, f64)]) -> f64 {
+    let xs: Vec<f64> = samples.iter().map(|&(w, _)| w).collect();
+    let ys: Vec<f64> = samples.iter().map(|&(_, t)| t).collect();
+    let slope = linfit_origin(&xs, &ys);
+    if slope <= 0.0 {
+        return 1.0;
+    }
+    (1.0 / (slope * peak_flops)).clamp(1e-4, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DType, Graph, OpKind, Shape};
+    use crate::perf::gpus::lookup;
+
+    fn toy() -> (Graph, NodeId) {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[32, 1024]), DType::F32);
+        let l = g
+            .op("fc", OpKind::Linear { in_features: 1024, out_features: 1024, bias: false }, &[x])
+            .unwrap();
+        (g, l)
+    }
+
+    #[test]
+    fn compute_time_scales_with_lambda() {
+        let (g, l) = toy();
+        let gpu = lookup("RTX 3080").unwrap();
+        let fast = PaleoModel::new(DeviceProfile::with_lambda(gpu, 0.8));
+        let slow = PaleoModel::new(DeviceProfile::with_lambda(gpu, 0.4));
+        let tf = fast.compute_time(g.node(l));
+        let ts = slow.compute_time(g.node(l));
+        assert!((ts / tf - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remote_read_dominates_on_wan() {
+        let (g, l) = toy();
+        let gpu = lookup("RTX 3080").unwrap();
+        let m = PaleoModel::new(DeviceProfile::with_lambda(gpu, 0.5));
+        let local = m.node_time(&g, l, &|_| None);
+        let wan = m.node_time(&g, l, &|_| Some(LinkModel::consumer_wan()));
+        assert!(wan > 10.0 * local, "wan={wan} local={local}");
+    }
+
+    #[test]
+    fn subgraph_bounds_ordered() {
+        let (g, _) = toy();
+        let gpu = lookup("A100").unwrap();
+        let m = PaleoModel::new(DeviceProfile::with_lambda(gpu, 0.5));
+        let ids: Vec<NodeId> = g.nodes.iter().map(|n| n.id).collect();
+        let (lo, hi) = m.subgraph_time_bounds(&g, &ids, &|_| None);
+        let serial = m.subgraph_time(&g, &ids, &|_| None);
+        assert!(lo <= hi);
+        assert!((serial - hi).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_fit_recovers_truth() {
+        let gpu = lookup("RTX 3080").unwrap();
+        let truth = 0.45;
+        let s = truth * gpu.peak_tensor_flops();
+        let samples: Vec<(f64, f64)> =
+            [1e9, 5e9, 2e10, 8e10].iter().map(|&w| (w, w / s)).collect();
+        let fitted = fit_lambda(gpu.peak_tensor_flops(), &samples);
+        assert!((fitted - truth).abs() < 1e-6, "fitted {fitted}");
+    }
+
+    #[test]
+    fn lambda_fit_clamps_degenerate() {
+        let gpu = lookup("RTX 3080").unwrap();
+        assert_eq!(fit_lambda(gpu.peak_tensor_flops(), &[]), 1.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Figure-1 dataset: "The trends of GPU and model memory".
+//!
+//! The paper's Figure 1 plots the memory required by landmark models against
+//! the memory of contemporary flagship GPUs over time, showing model memory
+//! outpacing hardware. We encode the canonical public numbers so
+//! `benches/fig1_trends.rs` can regenerate the figure's data series and its
+//! growth-rate conclusion.
+
+/// One model datapoint: year, name, parameter count, and the bytes needed
+/// just to *hold* the parameters in fp16 (inference floor).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelPoint {
+    pub year: u32,
+    pub name: &'static str,
+    pub params: f64,
+}
+
+impl ModelPoint {
+    /// fp16 parameter bytes.
+    pub fn infer_bytes(&self) -> f64 {
+        self.params * 2.0
+    }
+    /// Adam-trained fp16/fp32-mixed training footprint ≈ 16 bytes/param
+    /// (params + grads + fp32 master + m + v), the standard estimate.
+    pub fn train_bytes(&self) -> f64 {
+        self.params * 16.0
+    }
+}
+
+/// One GPU datapoint: year and device memory in GiB.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuPoint {
+    pub year: u32,
+    pub name: &'static str,
+    pub memory_gb: f64,
+}
+
+/// Landmark models, AlexNet → GPT-4 era (public figures).
+pub static MODEL_TREND: &[ModelPoint] = &[
+    ModelPoint { year: 2012, name: "AlexNet", params: 6.1e7 },
+    ModelPoint { year: 2014, name: "VGG-19", params: 1.44e8 },
+    ModelPoint { year: 2015, name: "ResNet-152", params: 6.0e7 },
+    ModelPoint { year: 2018, name: "BERT-Large", params: 3.4e8 },
+    ModelPoint { year: 2019, name: "GPT-2", params: 1.5e9 },
+    ModelPoint { year: 2020, name: "GPT-3", params: 1.75e11 },
+    ModelPoint { year: 2021, name: "Megatron-Turing", params: 5.3e11 },
+    ModelPoint { year: 2022, name: "PaLM", params: 5.4e11 },
+    ModelPoint { year: 2023, name: "GPT-4 (est.)", params: 1.8e12 },
+];
+
+/// Flagship training GPUs by launch year.
+pub static GPU_TREND: &[GpuPoint] = &[
+    GpuPoint { year: 2012, name: "K20 (GK110)", memory_gb: 5.0 },
+    GpuPoint { year: 2014, name: "K80", memory_gb: 24.0 },
+    GpuPoint { year: 2016, name: "P100", memory_gb: 16.0 },
+    GpuPoint { year: 2017, name: "V100", memory_gb: 32.0 },
+    GpuPoint { year: 2020, name: "A100", memory_gb: 80.0 },
+    GpuPoint { year: 2022, name: "H100", memory_gb: 80.0 },
+];
+
+/// Compound annual growth rate of a series of `(year, value)` points,
+/// fitted in log-space.
+pub fn cagr(points: &[(u32, f64)]) -> f64 {
+    let xs: Vec<f64> = points.iter().map(|&(y, _)| y as f64).collect();
+    let ys: Vec<f64> = points.iter().map(|&(_, v)| v.ln()).collect();
+    let (_, slope) = crate::util::stats::linfit(&xs, &ys);
+    slope.exp() - 1.0
+}
+
+/// The Figure-1 takeaway, computed: model-memory CAGR vs GPU-memory CAGR.
+pub fn growth_gap() -> (f64, f64) {
+    let model: Vec<(u32, f64)> =
+        MODEL_TREND.iter().map(|m| (m.year, m.train_bytes())).collect();
+    let gpu: Vec<(u32, f64)> =
+        GPU_TREND.iter().map(|g| (g.year, g.memory_gb * 1e9)).collect();
+    (cagr(&model), cagr(&gpu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_growth_outpaces_gpu_growth() {
+        let (model, gpu) = growth_gap();
+        assert!(model > gpu, "model CAGR {model} must exceed GPU CAGR {gpu}");
+        // Figure 1's qualitative claim: model memory grows ~10x faster.
+        assert!(model > 5.0 * gpu, "gap too small: {model} vs {gpu}");
+    }
+
+    #[test]
+    fn cagr_of_doubling_series() {
+        let pts: Vec<(u32, f64)> = (0..6).map(|i| (2000 + i, 2f64.powi(i as i32))).collect();
+        let r = cagr(&pts);
+        assert!((r - 1.0).abs() < 1e-9, "doubling = 100% CAGR, got {r}");
+    }
+
+    #[test]
+    fn gpt3_doesnt_fit_any_gpu() {
+        let gpt3 = MODEL_TREND.iter().find(|m| m.name == "GPT-3").unwrap();
+        let biggest = GPU_TREND.iter().map(|g| g.memory_gb * 1e9).fold(0.0, f64::max);
+        assert!(gpt3.infer_bytes() > biggest);
+    }
+}

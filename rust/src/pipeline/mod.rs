@@ -1,0 +1,15 @@
+//! Pipeline parallelism: the paper's §4 analytic model and a concrete
+//! microbatch schedule generator used by the live runtime.
+//!
+//! * [`analytics`] — Equations 3 & 4: FP latency of a partitioned DAG and
+//!   the pipelined cost of processing `n_b` batches, the model behind
+//!   Figures 5 and 6;
+//! * [`schedule`] — a deterministic GPipe-style (all-forward, all-backward)
+//!   microbatch schedule with bubble accounting, consumed by
+//!   [`crate::cluster`] when actually training.
+
+pub mod analytics;
+pub mod schedule;
+
+pub use analytics::{PipelineEstimate, StageCost};
+pub use schedule::{MicrobatchSchedule, PipeEvent, PipeEventKind};

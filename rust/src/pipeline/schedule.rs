@@ -1,0 +1,212 @@
+//! Deterministic microbatch schedule for the live pipeline runtime.
+//!
+//! GPipe-style all-forward/all-backward over `S` stages and `M` microbatches:
+//! forward of microbatch m at stage s may start once stage s finished m−1
+//! and stage s−1 finished m; backward symmetrically in reverse. Gradients
+//! accumulate across microbatches and a single Update task per stage closes
+//! the step (paper §3.6 "Update task").
+//!
+//! The schedule is a pure data structure so it can be unit-tested and used
+//! both by the simulator and the real executor in [`crate::cluster`].
+
+/// What a pipeline event does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipeEventKind {
+    Forward,
+    Backward,
+    Update,
+}
+
+/// One unit of pipeline work: (stage, microbatch, kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipeEvent {
+    pub stage: usize,
+    pub microbatch: usize,
+    pub kind: PipeEventKind,
+}
+
+/// A complete schedule: per-stage ordered event lists plus, for each event,
+/// its dependencies (events that must complete first).
+#[derive(Debug, Clone)]
+pub struct MicrobatchSchedule {
+    pub stages: usize,
+    pub microbatches: usize,
+    /// Event list per stage in execution order.
+    pub per_stage: Vec<Vec<PipeEvent>>,
+}
+
+impl MicrobatchSchedule {
+    /// Build the GPipe schedule for `stages` × `microbatches`.
+    pub fn gpipe(stages: usize, microbatches: usize) -> MicrobatchSchedule {
+        assert!(stages > 0 && microbatches > 0);
+        let mut per_stage = vec![Vec::new(); stages];
+        for (s, evs) in per_stage.iter_mut().enumerate() {
+            for m in 0..microbatches {
+                evs.push(PipeEvent { stage: s, microbatch: m, kind: PipeEventKind::Forward });
+            }
+            for m in (0..microbatches).rev() {
+                evs.push(PipeEvent { stage: s, microbatch: m, kind: PipeEventKind::Backward });
+            }
+            evs.push(PipeEvent { stage: s, microbatch: 0, kind: PipeEventKind::Update });
+        }
+        MicrobatchSchedule { stages, microbatches, per_stage }
+    }
+
+    /// The events `ev` depends on (cross-stage + same-stage-previous).
+    ///
+    /// * Forward(s, m): Forward(s−1, m);
+    /// * Backward(s, m): Backward(s+1, m) — stage s+1 produces dh for s —
+    ///   and Forward(s, m) (stashed input);
+    /// * Update(s): every Backward(s, ·).
+    pub fn deps(&self, ev: PipeEvent) -> Vec<PipeEvent> {
+        let mut d = Vec::new();
+        match ev.kind {
+            PipeEventKind::Forward => {
+                if ev.stage > 0 {
+                    d.push(PipeEvent {
+                        stage: ev.stage - 1,
+                        microbatch: ev.microbatch,
+                        kind: PipeEventKind::Forward,
+                    });
+                }
+            }
+            PipeEventKind::Backward => {
+                d.push(PipeEvent {
+                    stage: ev.stage,
+                    microbatch: ev.microbatch,
+                    kind: PipeEventKind::Forward,
+                });
+                if ev.stage + 1 < self.stages {
+                    d.push(PipeEvent {
+                        stage: ev.stage + 1,
+                        microbatch: ev.microbatch,
+                        kind: PipeEventKind::Backward,
+                    });
+                }
+            }
+            PipeEventKind::Update => {
+                for m in 0..self.microbatches {
+                    d.push(PipeEvent { stage: ev.stage, microbatch: m, kind: PipeEventKind::Backward });
+                }
+            }
+        }
+        d
+    }
+
+    /// Simulate the schedule with constant per-event durations and return the
+    /// makespan (used by tests and the ablation bench to verify the Eq.-4
+    /// bubble structure on the *operational* schedule, not just the analytic
+    /// formula).
+    pub fn simulate(&self, fwd_s: f64, bwd_s: f64, update_s: f64) -> f64 {
+        use std::collections::HashMap;
+        let mut finish: HashMap<(usize, usize, u8), f64> = HashMap::new();
+        let key = |e: &PipeEvent| (e.stage, e.microbatch, e.kind as u8);
+        // Stages execute their event lists in order; an event starts at
+        // max(stage-free time, deps-finish time).
+        let mut stage_free = vec![0.0f64; self.stages];
+        // Iterate in a global order that respects dependencies: repeatedly
+        // scan stages for runnable head events.
+        let mut heads = vec![0usize; self.stages];
+        let total: usize = self.per_stage.iter().map(|v| v.len()).sum();
+        let mut done = 0;
+        while done < total {
+            let mut progressed = false;
+            for s in 0..self.stages {
+                while heads[s] < self.per_stage[s].len() {
+                    let ev = self.per_stage[s][heads[s]];
+                    let deps = self.deps(ev);
+                    if !deps.iter().all(|d| finish.contains_key(&key(d))) {
+                        break;
+                    }
+                    let ready =
+                        deps.iter().map(|d| finish[&key(d)]).fold(0.0f64, f64::max);
+                    let start = ready.max(stage_free[s]);
+                    let dur = match ev.kind {
+                        PipeEventKind::Forward => fwd_s,
+                        PipeEventKind::Backward => bwd_s,
+                        PipeEventKind::Update => update_s,
+                    };
+                    let end = start + dur;
+                    finish.insert(key(&ev), end);
+                    stage_free[s] = end;
+                    heads[s] += 1;
+                    done += 1;
+                    progressed = true;
+                }
+            }
+            assert!(progressed, "schedule deadlocked");
+        }
+        stage_free.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_counts() {
+        let s = MicrobatchSchedule::gpipe(4, 8);
+        for evs in &s.per_stage {
+            // 8 fwd + 8 bwd + 1 update
+            assert_eq!(evs.len(), 17);
+        }
+    }
+
+    #[test]
+    fn forward_order_then_backward_reversed() {
+        let s = MicrobatchSchedule::gpipe(2, 3);
+        let evs = &s.per_stage[0];
+        assert_eq!(evs[0].kind, PipeEventKind::Forward);
+        assert_eq!(evs[0].microbatch, 0);
+        assert_eq!(evs[2].microbatch, 2);
+        assert_eq!(evs[3].kind, PipeEventKind::Backward);
+        assert_eq!(evs[3].microbatch, 2);
+        assert_eq!(evs[5].microbatch, 0);
+        assert_eq!(evs[6].kind, PipeEventKind::Update);
+    }
+
+    #[test]
+    fn deps_structure() {
+        let s = MicrobatchSchedule::gpipe(3, 2);
+        let f = PipeEvent { stage: 1, microbatch: 0, kind: PipeEventKind::Forward };
+        assert_eq!(
+            s.deps(f),
+            vec![PipeEvent { stage: 0, microbatch: 0, kind: PipeEventKind::Forward }]
+        );
+        let b = PipeEvent { stage: 1, microbatch: 1, kind: PipeEventKind::Backward };
+        let d = s.deps(b);
+        assert!(d.contains(&PipeEvent { stage: 1, microbatch: 1, kind: PipeEventKind::Forward }));
+        assert!(d.contains(&PipeEvent { stage: 2, microbatch: 1, kind: PipeEventKind::Backward }));
+        // Last stage's backward needs no downstream gradient.
+        let blast = PipeEvent { stage: 2, microbatch: 0, kind: PipeEventKind::Backward };
+        assert_eq!(s.deps(blast).len(), 1);
+    }
+
+    #[test]
+    fn simulated_makespan_matches_gpipe_formula() {
+        // Classic GPipe makespan with equal fwd=bwd=1, S stages, M microbatches:
+        // (M + S − 1)·(f+b) per the bubble analysis (+update).
+        let (s_n, m_n) = (4usize, 8usize);
+        let s = MicrobatchSchedule::gpipe(s_n, m_n);
+        let t = s.simulate(1.0, 1.0, 0.0);
+        let expected = (m_n as f64 + s_n as f64 - 1.0) * 2.0;
+        assert!((t - expected).abs() < 1e-9, "t={t} expected={expected}");
+    }
+
+    #[test]
+    fn more_microbatches_lower_bubble() {
+        let s4 = MicrobatchSchedule::gpipe(4, 4).simulate(1.0, 2.0, 0.5);
+        let s32 = MicrobatchSchedule::gpipe(4, 32).simulate(1.0, 2.0, 0.5);
+        // Per-microbatch cost shrinks toward (fwd+bwd) = 3.
+        assert!(s32 / 32.0 < s4 / 4.0);
+        assert!(s32 / 32.0 < 3.5);
+    }
+
+    #[test]
+    fn single_stage_degenerates_to_serial() {
+        let s = MicrobatchSchedule::gpipe(1, 5);
+        let t = s.simulate(1.0, 2.0, 1.0);
+        assert!((t - (5.0 * 3.0 + 1.0)).abs() < 1e-9);
+    }
+}

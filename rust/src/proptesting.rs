@@ -1,0 +1,122 @@
+//! Minimal property-testing harness (proptest is not in the offline crate
+//! set). Runs a property over many seeded random cases; on failure it
+//! reports the first failing seed so the case is reproducible, then panics.
+//!
+//! Used by `rust/tests/prop_invariants.rs` for scheduler / DAG / DHT /
+//! compression invariants.
+
+use crate::util::Rng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi)`.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi)
+    }
+    /// usize in `[lo, hi)`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as i64, hi as i64) as usize
+    }
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+    /// f32 vector with entries ~N(0, scale).
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() as f32 * scale).collect()
+    }
+    /// Vector of usizes each in `[lo, hi)`.
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.usize(lo, hi)).collect()
+    }
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Run `prop` over `cases` generated cases. The property returns
+/// `Err(description)` (or panics) to signal failure.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // A fixed base seed keeps CI deterministic; vary per-case.
+    const BASE: u64 = 0xF05100AD;
+    for case in 0..cases {
+        let seed = BASE.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}")
+            }
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "panic".into());
+                panic!("property '{name}' panicked on case {case} (seed {seed:#x}): {msg}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("tautology", 50, |g| {
+            n += 1;
+            let x = g.int(0, 100);
+            if (0..100).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_reports() {
+        check("always-false", 10, |_| Err("always-false".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_reports() {
+        check("panics", 5, |g| {
+            let v = g.vec_f32(3, 1.0);
+            assert!(v.len() == 4, "deliberate");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut first: Vec<i64> = vec![];
+        check("gen-a", 3, |g| {
+            first.push(g.int(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<i64> = vec![];
+        check("gen-b", 3, |g| {
+            second.push(g.int(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second, "same base seed ⇒ same cases");
+    }
+}

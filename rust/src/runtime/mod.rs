@@ -1,0 +1,382 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. The interchange format
+//! is **HLO text** (never serialized `HloModuleProto`): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects,
+//! while the text parser reassigns ids and round-trips cleanly (see
+//! `/opt/xla-example/README.md` and `python/compile/aot.py`).
+//!
+//! A [`Runtime`] owns one PJRT client plus the compiled executables of an
+//! artifact directory, described by `manifest.json` (written by `aot.py`).
+//! PJRT objects are not `Send`; each compnode thread owns its own `Runtime`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json;
+use crate::util::Rng;
+
+/// How a parameter tensor is initialized (carried in the manifest so rust
+/// can materialize the same init the L2 model expects).
+#[derive(Debug, Clone, PartialEq)]
+pub enum InitKind {
+    Zeros,
+    Ones,
+    Normal { std: f64 },
+}
+
+/// One parameter's spec.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+impl ParamSpec {
+    /// Materialize an initial value.
+    pub fn materialize(&self, rng: &mut Rng) -> Tensor {
+        match self.init {
+            InitKind::Zeros => Tensor::zeros(&self.shape),
+            InitKind::Ones => {
+                Tensor::from_vec(&self.shape, vec![1.0; self.shape.iter().product()])
+            }
+            InitKind::Normal { std } => Tensor::randn(&self.shape, std as f32, rng),
+        }
+    }
+}
+
+/// One artifact (an AOT-lowered jax function).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Number of outputs in the result tuple.
+    pub n_outputs: usize,
+}
+
+/// The manifest of an artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    /// Model config key/values (vocab, seq, batch, layers, dim, …).
+    pub config: HashMap<String, f64>,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Stage name → ordered parameter specs.
+    pub stage_params: HashMap<String, Vec<ParamSpec>>,
+    /// Ordered stage names (embed, block0…blockN, head).
+    pub stages: Vec<String>,
+}
+
+impl Manifest {
+    /// Parse `manifest.json`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let preset = root
+            .get("preset")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("manifest missing 'preset'"))?
+            .to_string();
+        let mut config = HashMap::new();
+        if let Some(obj) = root.get("config").and_then(|j| j.as_obj()) {
+            for (k, v) in obj {
+                if let Some(n) = v.as_f64() {
+                    config.insert(k.clone(), n);
+                }
+            }
+        }
+        let mut artifacts = Vec::new();
+        if let Some(obj) = root.get("artifacts").and_then(|j| j.as_obj()) {
+            for (name, spec) in obj {
+                artifacts.push(ArtifactSpec {
+                    name: name.clone(),
+                    file: spec
+                        .get("file")
+                        .and_then(|j| j.as_str())
+                        .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                        .to_string(),
+                    n_outputs: spec.get("n_outputs").and_then(|j| j.as_usize()).unwrap_or(1),
+                });
+            }
+        }
+        let mut stage_params = HashMap::new();
+        if let Some(obj) = root.get("stage_params").and_then(|j| j.as_obj()) {
+            for (stage, arr) in obj {
+                let mut specs = Vec::new();
+                for p in arr.as_arr().unwrap_or(&[]) {
+                    let shape: Vec<usize> = p
+                        .get("shape")
+                        .and_then(|j| j.as_arr())
+                        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default();
+                    let init = match p.get("init").and_then(|j| j.as_str()) {
+                        Some("zeros") | None => InitKind::Zeros,
+                        Some("ones") => InitKind::Ones,
+                        Some("normal") => InitKind::Normal {
+                            std: p.get("std").and_then(|j| j.as_f64()).unwrap_or(0.02),
+                        },
+                        Some(other) => bail!("unknown init kind '{other}'"),
+                    };
+                    specs.push(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(|j| j.as_str())
+                            .unwrap_or("param")
+                            .to_string(),
+                        shape,
+                        init,
+                    });
+                }
+                stage_params.insert(stage.clone(), specs);
+            }
+        }
+        let stages: Vec<String> = root
+            .get("stages")
+            .and_then(|j| j.as_arr())
+            .map(|a| a.iter().filter_map(|s| s.as_str().map(str::to_string)).collect())
+            .unwrap_or_default();
+        Ok(Manifest { preset, config, artifacts, stage_params, stages })
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).map(|&v| v as usize)
+    }
+}
+
+/// PJRT client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, executables: HashMap::new(), dir: PathBuf::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text file under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every artifact listed in a directory's manifest. Returns the
+    /// parsed manifest.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Manifest> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        for a in &manifest.artifacts {
+            self.load_hlo_text(&a.name, &dir.join(&a.file))?;
+        }
+        self.dir = dir.to_path_buf();
+        Ok(manifest)
+    }
+
+    /// Load only the artifacts whose names pass `filter` (compnodes load
+    /// just their own stage's functions).
+    pub fn load_dir_filtered(
+        &mut self,
+        dir: &Path,
+        filter: impl Fn(&str) -> bool,
+    ) -> Result<Manifest> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        for a in &manifest.artifacts {
+            if filter(&a.name) {
+                self.load_hlo_text(&a.name, &dir.join(&a.file))?;
+            }
+        }
+        self.dir = dir.to_path_buf();
+        Ok(manifest)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(String::as_str).collect()
+    }
+
+    /// Execute an artifact on literals; the (tuple) result is decomposed
+    /// into its elements.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let out = exe.execute::<xla::Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with tensors in / tensors out (the coordinator-facing API).
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let outs = self.execute(name, &lits)?;
+        outs.iter().map(from_literal).collect()
+    }
+
+    /// Upload a tensor to a device-resident buffer. Hot-path optimization:
+    /// buffers created once (e.g. stage parameters) are reused across many
+    /// `execute_buffers` calls, skipping the per-call host→literal→device
+    /// double copy of the literal path (EXPERIMENTS.md §Perf).
+    pub fn to_buffer(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            Tensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+            Tensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Execute on pre-staged device buffers; the tuple result is brought
+    /// back to the host and decomposed.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let out = exe.execute_b(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        lit.to_tuple()?.iter().map(from_literal).collect()
+    }
+}
+
+/// Convert a [`Tensor`] into an XLA literal.
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        Tensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert an XLA literal back into a [`Tensor`].
+pub fn from_literal(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::from_vec(&dims, l.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(Tensor::from_ivec(&dims, l.to_vec::<i32>()?)),
+        other => bail!("unsupported artifact output element type {:?}", other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny HLO module in text form — lets the loader be tested without
+    /// any python-produced artifacts.
+    const ADD_HLO: &str = r#"HloModule add_test
+
+ENTRY main {
+  p0 = f32[2,2]{1,0} parameter(0)
+  p1 = f32[2,2]{1,0} parameter(1)
+  sum = f32[2,2]{1,0} add(p0, p1)
+  ROOT out = (f32[2,2]{1,0}) tuple(sum)
+}
+"#;
+
+    fn write_temp(name: &str, contents: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fusionai_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_execute_hlo_text() {
+        let path = write_temp("add.hlo.txt", ADD_HLO);
+        let mut rt = Runtime::cpu().unwrap();
+        rt.load_hlo_text("add", &path).unwrap();
+        assert!(rt.has("add"));
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![10.0, 20.0, 30.0, 40.0]);
+        let out = rt.run("add", &[a, b]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].f(), &[11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32_and_i32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 9.0, -7.25]);
+        let l = to_literal(&t).unwrap();
+        assert_eq!(from_literal(&l).unwrap(), t);
+        let ti = Tensor::from_ivec(&[4], vec![5, -3, 0, 127]);
+        let li = to_literal(&ti).unwrap();
+        assert_eq!(from_literal(&li).unwrap(), ti);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.run("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let manifest = r#"{
+            "preset": "gpt-tiny",
+            "config": {"vocab": 256, "dim": 32, "stages": 3},
+            "stages": ["embed", "block0", "head"],
+            "artifacts": {
+                "embed_fwd": {"file": "embed_fwd.hlo.txt", "n_outputs": 1},
+                "head_bwd": {"file": "head_bwd.hlo.txt", "n_outputs": 4}
+            },
+            "stage_params": {
+                "embed": [
+                    {"name": "wte", "shape": [256, 32], "init": "normal", "std": 0.02},
+                    {"name": "wpe", "shape": [16, 32], "init": "normal", "std": 0.02}
+                ],
+                "head": [
+                    {"name": "lnf_g", "shape": [32], "init": "ones"},
+                    {"name": "lnf_b", "shape": [32], "init": "zeros"}
+                ]
+            }
+        }"#;
+        let path = write_temp("manifest.json", manifest);
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.preset, "gpt-tiny");
+        assert_eq!(m.config_usize("vocab"), Some(256));
+        assert_eq!(m.stages, vec!["embed", "block0", "head"]);
+        assert_eq!(m.artifacts.len(), 2);
+        let embed = &m.stage_params["embed"];
+        assert_eq!(embed[0].shape, vec![256, 32]);
+        assert_eq!(embed[0].init, InitKind::Normal { std: 0.02 });
+        let head = &m.stage_params["head"];
+        assert_eq!(head[0].init, InitKind::Ones);
+        let mut rng = Rng::new(0);
+        let g = head[0].materialize(&mut rng);
+        assert!(g.f().iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,523 @@
+//! Task scheduling (paper §3.8, Eq. 2):
+//!
+//! ```text
+//!   min_A  max_{p∈P}  Σ_{k∈A_p} T(G_Sk)
+//!   s.t.   D_gpu^p  ≥ Σ_{k∈A_p} D_gpu(G_Sk)
+//!          D_cpu^p  ≥ Σ_{k∈A_p} D_cpu(G_Sk)
+//!          D_disk^p ≥ Σ_{k∈A_p} D_disk(G_Sk)
+//! ```
+//!
+//! Makespan minimization with per-peer memory capacities. The problem is
+//! NP-hard (multiprocessor scheduling); we implement the classical
+//! **LPT greedy** (longest processing time first onto the least-loaded
+//! feasible peer) followed by a **move/swap local search**, plus baseline
+//! strategies (random, round-robin) used by the ablation bench. Peers are
+//! heterogeneous: a task's processing time on peer `p` is
+//! `flops / achieved_flops(p)` (paper §3.7).
+
+use crate::perf::paleo::DeviceProfile;
+use crate::util::Rng;
+
+/// Resource demands + compute weight of one task (sub-DAG `G_Sk`).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub id: usize,
+    /// Forward (or fwd+bwd) FLOPs of the sub-DAG.
+    pub flops: f64,
+    pub gpu_bytes: u64,
+    pub cpu_bytes: u64,
+    pub disk_bytes: u64,
+}
+
+/// One candidate peer with capacities (paper §3.3: `D_gpu`, `D_cpu`,
+/// `D_disk`) and an achieved-speed profile.
+#[derive(Debug, Clone)]
+pub struct PeerSpec {
+    pub id: usize,
+    pub profile: DeviceProfile,
+    pub gpu_capacity: u64,
+    pub cpu_capacity: u64,
+    pub disk_capacity: u64,
+}
+
+impl PeerSpec {
+    /// Time for `task` on this peer: `C = FLOPs / S(p)`.
+    pub fn task_time(&self, task: &TaskSpec) -> f64 {
+        task.flops / self.profile.achieved_flops()
+    }
+}
+
+/// The result: which tasks run where.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// task id → peer index (into the peers slice used to build it).
+    pub of_task: Vec<usize>,
+    /// Per-peer total time (the objective terms).
+    pub loads: Vec<f64>,
+    /// Per-peer residual memory after assignment.
+    pub gpu_used: Vec<u64>,
+    pub cpu_used: Vec<u64>,
+    pub disk_used: Vec<u64>,
+}
+
+impl Schedule {
+    /// The Eq.-2 objective.
+    pub fn makespan(&self) -> f64 {
+        self.loads.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Check all constraints of Eq. 2 hold (property tests use this).
+    pub fn validate(&self, tasks: &[TaskSpec], peers: &[PeerSpec]) -> Result<(), String> {
+        if self.of_task.len() != tasks.len() {
+            return Err("not all tasks assigned".into());
+        }
+        let mut gpu = vec![0u64; peers.len()];
+        let mut cpu = vec![0u64; peers.len()];
+        let mut disk = vec![0u64; peers.len()];
+        let mut loads = vec![0.0; peers.len()];
+        for (t, &p) in self.of_task.iter().enumerate() {
+            if p >= peers.len() {
+                return Err(format!("task {t} on unknown peer {p}"));
+            }
+            gpu[p] += tasks[t].gpu_bytes;
+            cpu[p] += tasks[t].cpu_bytes;
+            disk[p] += tasks[t].disk_bytes;
+            loads[p] += peers[p].task_time(&tasks[t]);
+        }
+        for p in 0..peers.len() {
+            if gpu[p] > peers[p].gpu_capacity {
+                return Err(format!("peer {p} GPU over capacity"));
+            }
+            if cpu[p] > peers[p].cpu_capacity {
+                return Err(format!("peer {p} CPU over capacity"));
+            }
+            if disk[p] > peers[p].disk_capacity {
+                return Err(format!("peer {p} disk over capacity"));
+            }
+            if (loads[p] - self.loads[p]).abs() > 1e-9 * loads[p].max(1.0) {
+                return Err(format!("peer {p} load bookkeeping diverged"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Scheduling failure.
+#[derive(Debug, thiserror::Error)]
+pub enum SchedError {
+    #[error("task {0} fits on no peer (memory constraints)")]
+    Infeasible(usize),
+}
+
+fn fits(task: &TaskSpec, peer: &PeerSpec, gpu: u64, cpu: u64, disk: u64) -> bool {
+    gpu + task.gpu_bytes <= peer.gpu_capacity
+        && cpu + task.cpu_bytes <= peer.cpu_capacity
+        && disk + task.disk_bytes <= peer.disk_capacity
+}
+
+/// LPT greedy: tasks in decreasing reference time, each onto the feasible
+/// peer whose *resulting* load is smallest.
+pub fn lpt(tasks: &[TaskSpec], peers: &[PeerSpec]) -> Result<Schedule, SchedError> {
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    // Reference time on the fastest peer — any consistent monotone key works.
+    order.sort_by(|&a, &b| tasks[b].flops.partial_cmp(&tasks[a].flops).unwrap());
+
+    let mut sched = Schedule {
+        of_task: vec![usize::MAX; tasks.len()],
+        loads: vec![0.0; peers.len()],
+        gpu_used: vec![0; peers.len()],
+        cpu_used: vec![0; peers.len()],
+        disk_used: vec![0; peers.len()],
+    };
+    for &t in &order {
+        let task = &tasks[t];
+        let mut best: Option<(usize, f64)> = None;
+        for (p, peer) in peers.iter().enumerate() {
+            if !fits(task, peer, sched.gpu_used[p], sched.cpu_used[p], sched.disk_used[p]) {
+                continue;
+            }
+            let new_load = sched.loads[p] + peer.task_time(task);
+            if best.map(|(_, l)| new_load < l).unwrap_or(true) {
+                best = Some((p, new_load));
+            }
+        }
+        let (p, _) = best.ok_or(SchedError::Infeasible(t))?;
+        sched.of_task[t] = p;
+        sched.loads[p] += peers[p].task_time(task);
+        sched.gpu_used[p] += task.gpu_bytes;
+        sched.cpu_used[p] += task.cpu_bytes;
+        sched.disk_used[p] += task.disk_bytes;
+    }
+    Ok(sched)
+}
+
+/// Local-search refinement: repeatedly try moving a task off the makespan
+/// peer (or swapping with a task elsewhere) while the makespan strictly
+/// improves. Bounded iterations keep it O(rounds·n·p).
+pub fn refine(sched: &mut Schedule, tasks: &[TaskSpec], peers: &[PeerSpec], max_rounds: usize) {
+    for _ in 0..max_rounds {
+        let (hot, _) = sched
+            .loads
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let mut improved = false;
+
+        // Move: take each task on the hot peer, try every other peer.
+        let hot_tasks: Vec<usize> =
+            (0..tasks.len()).filter(|&t| sched.of_task[t] == hot).collect();
+        'outer: for &t in &hot_tasks {
+            for p in 0..peers.len() {
+                if p == hot {
+                    continue;
+                }
+                if !fits(
+                    &tasks[t],
+                    &peers[p],
+                    sched.gpu_used[p],
+                    sched.cpu_used[p],
+                    sched.disk_used[p],
+                ) {
+                    continue;
+                }
+                let new_hot = sched.loads[hot] - peers[hot].task_time(&tasks[t]);
+                let new_p = sched.loads[p] + peers[p].task_time(&tasks[t]);
+                if new_hot.max(new_p) + 1e-15 < sched.makespan() {
+                    apply_move(sched, tasks, peers, t, p);
+                    improved = true;
+                    break 'outer;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+fn apply_move(sched: &mut Schedule, tasks: &[TaskSpec], peers: &[PeerSpec], t: usize, to: usize) {
+    let from = sched.of_task[t];
+    sched.loads[from] -= peers[from].task_time(&tasks[t]);
+    sched.gpu_used[from] -= tasks[t].gpu_bytes;
+    sched.cpu_used[from] -= tasks[t].cpu_bytes;
+    sched.disk_used[from] -= tasks[t].disk_bytes;
+    sched.of_task[t] = to;
+    sched.loads[to] += peers[to].task_time(&tasks[t]);
+    sched.gpu_used[to] += tasks[t].gpu_bytes;
+    sched.cpu_used[to] += tasks[t].cpu_bytes;
+    sched.disk_used[to] += tasks[t].disk_bytes;
+}
+
+/// The production entry point: LPT + refinement.
+pub fn schedule(tasks: &[TaskSpec], peers: &[PeerSpec]) -> Result<Schedule, SchedError> {
+    let mut s = lpt(tasks, peers)?;
+    refine(&mut s, tasks, peers, 4 * tasks.len().max(8));
+    Ok(s)
+}
+
+/// Baseline: uniformly random feasible peer (ablation).
+pub fn random_schedule(
+    tasks: &[TaskSpec],
+    peers: &[PeerSpec],
+    rng: &mut Rng,
+) -> Result<Schedule, SchedError> {
+    let mut sched = Schedule {
+        of_task: vec![usize::MAX; tasks.len()],
+        loads: vec![0.0; peers.len()],
+        gpu_used: vec![0; peers.len()],
+        cpu_used: vec![0; peers.len()],
+        disk_used: vec![0; peers.len()],
+    };
+    for (t, task) in tasks.iter().enumerate() {
+        let feasible: Vec<usize> = (0..peers.len())
+            .filter(|&p| {
+                fits(task, &peers[p], sched.gpu_used[p], sched.cpu_used[p], sched.disk_used[p])
+            })
+            .collect();
+        if feasible.is_empty() {
+            return Err(SchedError::Infeasible(t));
+        }
+        let p = *rng.choose(&feasible);
+        sched.of_task[t] = p;
+        sched.loads[p] += peers[p].task_time(task);
+        sched.gpu_used[p] += task.gpu_bytes;
+        sched.cpu_used[p] += task.cpu_bytes;
+        sched.disk_used[p] += task.disk_bytes;
+    }
+    Ok(sched)
+}
+
+/// Baseline: round-robin ignoring speeds (ablation — what a heterogeneity-
+/// unaware system like the ones §2.2 critiques would do).
+pub fn round_robin(tasks: &[TaskSpec], peers: &[PeerSpec]) -> Result<Schedule, SchedError> {
+    let mut sched = Schedule {
+        of_task: vec![usize::MAX; tasks.len()],
+        loads: vec![0.0; peers.len()],
+        gpu_used: vec![0; peers.len()],
+        cpu_used: vec![0; peers.len()],
+        disk_used: vec![0; peers.len()],
+    };
+    for (t, task) in tasks.iter().enumerate() {
+        // try peers starting at t % n until one fits
+        let n = peers.len();
+        let mut placed = false;
+        for off in 0..n {
+            let p = (t + off) % n;
+            if fits(task, &peers[p], sched.gpu_used[p], sched.cpu_used[p], sched.disk_used[p]) {
+                sched.of_task[t] = p;
+                sched.loads[p] += peers[p].task_time(task);
+                sched.gpu_used[p] += task.gpu_bytes;
+                sched.cpu_used[p] += task.cpu_bytes;
+                sched.disk_used[p] += task.disk_bytes;
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            return Err(SchedError::Infeasible(t));
+        }
+    }
+    Ok(sched)
+}
+
+/// Rescheduling after a peer failure (paper §3.2: "the broker selects a
+/// replacement from the backup compnode pool"): move the failed peer's tasks
+/// onto the replacement (preferred) or, if they don't fit, onto the
+/// least-loaded survivors.
+pub fn reschedule_failure(
+    sched: &mut Schedule,
+    tasks: &[TaskSpec],
+    peers: &[PeerSpec],
+    failed: usize,
+    replacement: Option<usize>,
+) -> Result<Vec<usize>, SchedError> {
+    let moved: Vec<usize> =
+        (0..tasks.len()).filter(|&t| sched.of_task[t] == failed).collect();
+    for &t in &moved {
+        // Remove from failed peer's books.
+        apply_move_out(sched, tasks, peers, t);
+        let mut target = None;
+        if let Some(r) = replacement {
+            if r != failed
+                && fits(&tasks[t], &peers[r], sched.gpu_used[r], sched.cpu_used[r], sched.disk_used[r])
+            {
+                target = Some(r);
+            }
+        }
+        if target.is_none() {
+            let mut best: Option<(usize, f64)> = None;
+            for p in 0..peers.len() {
+                if p == failed {
+                    continue;
+                }
+                if !fits(&tasks[t], &peers[p], sched.gpu_used[p], sched.cpu_used[p], sched.disk_used[p]) {
+                    continue;
+                }
+                let load = sched.loads[p] + peers[p].task_time(&tasks[t]);
+                if best.map(|(_, l)| load < l).unwrap_or(true) {
+                    best = Some((p, load));
+                }
+            }
+            target = best.map(|(p, _)| p);
+        }
+        let p = target.ok_or(SchedError::Infeasible(t))?;
+        sched.of_task[t] = p;
+        sched.loads[p] += peers[p].task_time(&tasks[t]);
+        sched.gpu_used[p] += tasks[t].gpu_bytes;
+        sched.cpu_used[p] += tasks[t].cpu_bytes;
+        sched.disk_used[p] += tasks[t].disk_bytes;
+    }
+    Ok(moved)
+}
+
+fn apply_move_out(sched: &mut Schedule, tasks: &[TaskSpec], peers: &[PeerSpec], t: usize) {
+    let from = sched.of_task[t];
+    sched.loads[from] -= peers[from].task_time(&tasks[t]);
+    sched.gpu_used[from] -= tasks[t].gpu_bytes;
+    sched.cpu_used[from] -= tasks[t].cpu_bytes;
+    sched.disk_used[from] -= tasks[t].disk_bytes;
+    sched.of_task[t] = usize::MAX;
+}
+
+/// Helpers to build specs from a decomposition + device list.
+pub mod build {
+    use super::*;
+    use crate::dag::Graph;
+    use crate::decompose::Decomposition;
+    use crate::perf::gpus::GpuSpec;
+
+    /// Task specs from a decomposition (fwd+bwd FLOPs; training memory).
+    pub fn tasks_from_decomposition(g: &Graph, d: &Decomposition, training: bool) -> Vec<TaskSpec> {
+        (0..d.num_subgraphs())
+            .map(|s| {
+                let fwd = d.sub_flops(g, s);
+                let bwd: f64 = d.subgraphs[s]
+                    .nodes
+                    .iter()
+                    .map(|&n| crate::dag::flops::bwd_flops(g.node(n)))
+                    .sum();
+                let gpu = if training {
+                    d.sub_gpu_bytes(g, s)
+                } else {
+                    d.subgraphs[s]
+                        .nodes
+                        .iter()
+                        .map(|&n| crate::dag::flops::gpu_bytes_infer(g.node(n)))
+                        .sum()
+                };
+                TaskSpec {
+                    id: s,
+                    flops: if training { fwd + bwd } else { fwd },
+                    gpu_bytes: gpu,
+                    cpu_bytes: gpu / 2,
+                    disk_bytes: d.sub_param_bytes(g, s),
+                }
+            })
+            .collect()
+    }
+
+    /// A fleet of identical peers from one GPU spec.
+    pub fn uniform_peers(gpu: &GpuSpec, lambda: f64, count: usize) -> Vec<PeerSpec> {
+        (0..count)
+            .map(|id| PeerSpec {
+                id,
+                profile: DeviceProfile::with_lambda(gpu, lambda),
+                gpu_capacity: gpu.memory_bytes(),
+                cpu_capacity: 2 * gpu.memory_bytes(),
+                disk_capacity: 64 * gpu.memory_bytes(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::gpus::lookup;
+
+    fn peers(n: usize, gpu: &str, lambda: f64) -> Vec<PeerSpec> {
+        build::uniform_peers(lookup(gpu).unwrap(), lambda, n)
+    }
+
+    fn simple_tasks(flops: &[f64]) -> Vec<TaskSpec> {
+        flops
+            .iter()
+            .enumerate()
+            .map(|(id, &f)| TaskSpec { id, flops: f, gpu_bytes: 1, cpu_bytes: 1, disk_bytes: 1 })
+            .collect()
+    }
+
+    #[test]
+    fn lpt_balances_uniform_peers() {
+        let tasks = simple_tasks(&[5.0, 4.0, 3.0, 3.0, 3.0, 2.0]);
+        let ps = peers(2, "RTX 3080", 0.5);
+        let s = schedule(&tasks, &ps).unwrap();
+        s.validate(&tasks, &ps).unwrap();
+        // Optimal makespan splits 20 FLOPs as 10/10.
+        let t_unit = ps[0].task_time(&tasks[5]) / 2.0; // time per flop
+        assert!((s.makespan() / t_unit - 10.0).abs() < 1e-6, "makespan {}", s.makespan());
+    }
+
+    #[test]
+    fn heterogeneous_peers_get_proportional_load() {
+        // One H100 + one 3080: H100 should take much more work.
+        let mut ps = peers(1, "H100", 0.5);
+        ps.extend(peers(1, "RTX 3080", 0.5).into_iter().map(|mut p| {
+            p.id = 1;
+            p
+        }));
+        let tasks = simple_tasks(&vec![1e12; 40]);
+        let s = schedule(&tasks, &ps).unwrap();
+        s.validate(&tasks, &ps).unwrap();
+        let on_h100 = s.of_task.iter().filter(|&&p| p == 0).count();
+        assert!(on_h100 > 25, "H100 got only {on_h100}/40 tasks");
+    }
+
+    #[test]
+    fn memory_constraints_respected() {
+        let mut ps = peers(2, "RTX 3080", 0.5);
+        ps[0].gpu_capacity = 10; // tiny
+        let tasks: Vec<TaskSpec> = (0..4)
+            .map(|id| TaskSpec { id, flops: 1e9, gpu_bytes: 8, cpu_bytes: 1, disk_bytes: 1 })
+            .collect();
+        let s = schedule(&tasks, &ps).unwrap();
+        s.validate(&tasks, &ps).unwrap();
+        // peer 0 can hold at most one task (8 ≤ 10 < 16).
+        assert!(s.of_task.iter().filter(|&&p| p == 0).count() <= 1);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let ps = {
+            let mut ps = peers(1, "RTX 3080", 0.5);
+            ps[0].gpu_capacity = 4;
+            ps
+        };
+        let tasks =
+            vec![TaskSpec { id: 0, flops: 1.0, gpu_bytes: 100, cpu_bytes: 0, disk_bytes: 0 }];
+        assert!(matches!(schedule(&tasks, &ps), Err(SchedError::Infeasible(0))));
+    }
+
+    #[test]
+    fn refine_never_worsens() {
+        let mut rng = Rng::new(9);
+        for trial in 0..20 {
+            let n = 5 + (trial % 10);
+            let tasks = simple_tasks(
+                &(0..n).map(|i| ((i * 37 + trial * 11) % 17 + 1) as f64).collect::<Vec<_>>(),
+            );
+            let ps = peers(3, "RTX 3080", 0.5);
+            let before = random_schedule(&tasks, &ps, &mut rng).unwrap();
+            let mut after = before.clone();
+            refine(&mut after, &tasks, &ps, 100);
+            after.validate(&tasks, &ps).unwrap();
+            assert!(after.makespan() <= before.makespan() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn lpt_beats_random_usually() {
+        let mut rng = Rng::new(1234);
+        let tasks = simple_tasks(&(1..=30).map(|i| i as f64).collect::<Vec<_>>());
+        let ps = peers(5, "RTX 3080", 0.5);
+        let good = schedule(&tasks, &ps).unwrap().makespan();
+        let mut wins = 0;
+        for _ in 0..10 {
+            let r = random_schedule(&tasks, &ps, &mut rng).unwrap().makespan();
+            if good <= r + 1e-12 {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 9, "LPT beaten too often ({wins}/10)");
+    }
+
+    #[test]
+    fn reschedule_moves_all_failed_tasks() {
+        let tasks = simple_tasks(&[4.0, 3.0, 2.0, 2.0, 1.0]);
+        let ps = peers(3, "RTX 3080", 0.5);
+        let mut s = schedule(&tasks, &ps).unwrap();
+        let victim = s.of_task[0];
+        let moved = reschedule_failure(&mut s, &tasks, &ps, victim, None).unwrap();
+        assert!(!moved.is_empty());
+        assert!(s.of_task.iter().all(|&p| p != victim));
+        s.validate(&tasks, &ps).unwrap();
+    }
+
+    #[test]
+    fn reschedule_prefers_replacement() {
+        let tasks = simple_tasks(&[4.0, 3.0]);
+        let ps = peers(3, "RTX 3080", 0.5);
+        // Put everything on peer 0 manually.
+        let mut s = Schedule {
+            of_task: vec![0, 0],
+            loads: vec![ps[0].task_time(&tasks[0]) + ps[0].task_time(&tasks[1]), 0.0, 0.0],
+            gpu_used: vec![2, 0, 0],
+            cpu_used: vec![2, 0, 0],
+            disk_used: vec![2, 0, 0],
+        };
+        reschedule_failure(&mut s, &tasks, &ps, 0, Some(2)).unwrap();
+        assert!(s.of_task.iter().all(|&p| p == 2));
+        s.validate(&tasks, &ps).unwrap();
+    }
+}

@@ -1,0 +1,334 @@
+//! Dense row-major f32/i32 tensors and the numeric kernels used by the
+//! pure-rust reference engine ([`crate::exec::RefEngine`]).
+//!
+//! This is deliberately simple, correct, testable code — the *execution
+//! plane* contract (paper §3.1, P3/P4) is that a compnode may run sub-DAGs
+//! on any backend; `RefEngine` is the backend that needs no artifacts and
+//! runs anywhere, used by the simulator, the quickstart example and as the
+//! numerics oracle opposite the XLA engine in cross-engine tests.
+
+use crate::dag::Shape;
+
+/// A dense row-major tensor. `data` is either f32 or i32 storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_ivec(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    /// Gaussian init with the given std (He/Xavier-style scaling chosen by
+    /// callers).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32 * std).collect();
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.numel() * 4) as u64
+    }
+
+    pub fn to_shape_struct(&self) -> Shape {
+        Shape::of(self.shape())
+    }
+
+    /// f32 view (panics on i32 tensors — callers route by dtype).
+    pub fn f(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            Tensor::I32 { .. } => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f_mut(&mut self) -> &mut [f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            Tensor::I32 { .. } => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i(&self) -> &[i32] {
+        match self {
+            Tensor::I32 { data, .. } => data,
+            Tensor::F32 { .. } => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self, Tensor::F32 { .. })
+    }
+
+    /// Scalar value of a 0-d/1-element tensor.
+    pub fn item(&self) -> f32 {
+        let f = self.f();
+        assert_eq!(f.len(), 1, "item() on non-scalar");
+        f[0]
+    }
+
+    /// Elementwise binary op producing a new tensor (equal shapes).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape(), other.shape(), "zip shape mismatch");
+        let a = self.f();
+        let b = other.f();
+        Tensor::F32 {
+            shape: self.shape().to_vec(),
+            data: a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect(),
+        }
+    }
+
+    /// Elementwise unary map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::F32 { shape: self.shape().to_vec(), data: self.f().iter().map(|&x| f(x)).collect() }
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
+        let b = other.f().to_vec();
+        for (x, y) in self.f_mut().iter_mut().zip(b) {
+            *x += alpha * y;
+        }
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.f().iter().sum()
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.f().iter().map(|&x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]` — blocked ikj loop, the RefEngine matmul.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// Matmul into an existing buffer (hot-path variant; avoids allocation).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    // ikj order: streams B and C rows, good cache behaviour without tiling.
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `C[m,n] = A[m,k] · Bᵀ[n,k]`.
+pub fn matmul_bt(a: &[f32], b_t: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b_t.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b_t[j * k..(j + 1) * k];
+            let mut s = 0.0;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+/// `C[m,n] = Aᵀ[k,m] · B[k,n]` (for weight gradients).
+pub fn matmul_at(a_t: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a_t.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a_t[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Numerically stable softmax over the last axis, in place.
+pub fn softmax_lastaxis(data: &mut [f32], row: usize) {
+    assert!(row > 0 && data.len() % row == 0);
+    for chunk in data.chunks_mut(row) {
+        let mx = chunk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in chunk.iter_mut() {
+            *x = (*x - mx).exp();
+            sum += *x;
+        }
+        for x in chunk.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// GELU (tanh approximation — matches jax.nn.gelu default).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx GELU (tanh approximation).
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let x3 = 0.044715 * x * x * x;
+    let t = (C * (x + x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &i, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] · [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (3, 5, 4);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let c = matmul(&a, &b, m, k, n);
+        // b_t[n,k]
+        let mut bt = vec![0.0; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let c2 = matmul_bt(&a, &bt, m, k, n);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // a_t[k,m]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let c3 = matmul_at(&at, &b, m, k, n);
+        for (x, y) in c.iter().zip(&c3) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut d = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_lastaxis(&mut d, 3);
+        let s1: f32 = d[..3].iter().sum();
+        let s2: f32 = d[3..].iter().sum();
+        assert!((s1 - 1.0).abs() < 1e-6);
+        assert!((s2 - 1.0).abs() < 1e-6);
+        assert!(d[2] > d[1] && d[1] > d[0]);
+    }
+
+    #[test]
+    fn softmax_stable_at_large_logits() {
+        let mut d = vec![1000.0, 1001.0];
+        softmax_lastaxis(&mut d, 2);
+        assert!(d.iter().all(|x| x.is_finite()));
+        assert!((d[0] + d[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn tensor_basics() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[4, 4], 0.1, &mut rng);
+        assert_eq!(t.numel(), 16);
+        assert_eq!(t.bytes(), 64);
+        let z = Tensor::zeros(&[4, 4]);
+        let s = t.zip(&z, |a, b| a + b);
+        assert_eq!(s, t);
+        let mut acc = Tensor::zeros(&[4, 4]);
+        acc.axpy(2.0, &t);
+        for (a, b) in acc.f().iter().zip(t.f()) {
+            assert!((a - 2.0 * b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

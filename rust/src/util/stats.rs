@@ -1,0 +1,206 @@
+//! Summary statistics and least-squares fitting helpers.
+//!
+//! Used by the benchmark harness ([`crate::benchutil`]), the hardware
+//! profiler (fitting the PALEO scaling-down factor λ and the α-β link
+//! parameters, paper §3.7) and the metrics module.
+
+/// Streaming summary of a sample: count / mean / variance (Welford) plus
+/// min/max. Percentiles require the retained-sample [`Sample`] type.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// A retained sample supporting percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Sample {
+    xs: Vec<f64>,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Sample { xs: Vec::new() }
+    }
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+    /// Percentile by linear interpolation; `q` in `[0, 1]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Ordinary least squares for `y ≈ a + b·x`. Returns `(a, b)`.
+///
+/// This is exactly the α-β model fit the paper uses for links
+/// (`T_comm = α + β·M`, §3.3) and the λ scaling-factor regression (§3.7,
+/// with x = predicted peak-speed time, intercept pinned by the caller if
+/// needed).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Least squares through the origin: `y ≈ b·x`. Returns `b`.
+/// Used for the λ fit where S(p) = λ·S*(p) has no intercept.
+pub fn linfit_origin(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    if sxx == 0.0 {
+        0.0
+    } else {
+        sxy / sxx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+        let naive_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.var() - naive_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Sample::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(1.0) - 100.0).abs() < 1e-9);
+        assert!(s.p99() > 98.0);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_origin_recovers_slope() {
+        let xs = [1.0, 2.0, 4.0];
+        let ys = [0.8, 1.6, 3.2];
+        let b = linfit_origin(&xs, &ys);
+        assert!((b - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_degenerate() {
+        let (a, b) = linfit(&[2.0, 2.0], &[5.0, 7.0]);
+        assert_eq!(b, 0.0);
+        assert_eq!(a, 6.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration: dynamic join/leave (paper §3.2) — broker liveness, backup
+//! promotion, rescheduling, DHT data survival and cluster recovery, driven
+//! through scripted and randomized churn.
+
+use std::sync::Arc;
+
+use fusionai::broker::{Broker, Event, NodeClass, NodeState};
+use fusionai::cluster::data::{DataProvider, SyntheticCorpus};
+use fusionai::cluster::SimCluster;
+use fusionai::decompose::Decomposition;
+use fusionai::dht::Dht;
+use fusionai::exec::{Adam, RefEngine};
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::net::{NetworkSim, Topology};
+use fusionai::perf::comm::LinkModel;
+use fusionai::perf::gpus::lookup;
+use fusionai::tensor::Tensor;
+use fusionai::util::Rng;
+
+#[test]
+fn broker_survives_random_churn() {
+    let mut broker = Broker::new(1.5);
+    let mut rng = Rng::new(123);
+    let gpu = lookup("RTX 3080").unwrap();
+    // 10 active + 5 backups.
+    for i in 0..15 {
+        broker.register(gpu, 0.5, NodeClass::Antnode, 0.0, i >= 10);
+    }
+    let g = TransformerConfig::tiny().build_graph();
+    let job = broker.submit_job(g, 10, true).unwrap();
+
+    let mut clock = 0.0;
+    let mut failures = 0;
+    for round in 0..20 {
+        clock += 1.0;
+        // Random subset heartbeats; ~10% of nodes go silent each round.
+        let ids: Vec<usize> = (0..15).collect();
+        for &n in &ids {
+            if broker.state(n) == Some(NodeState::Offline) {
+                continue;
+            }
+            if rng.chance(0.8) {
+                broker.heartbeat(n, clock).unwrap();
+            }
+        }
+        for dead in broker.check_liveness(clock) {
+            failures += 1;
+            // Only reschedule if the dead node carried tasks for this job.
+            let carried = {
+                let j = broker.job(job).unwrap();
+                (0..j.tasks.len()).any(|k| j.node_of_task(k) == dead)
+            };
+            if carried {
+                broker.handle_failure(job, dead).unwrap();
+            }
+        }
+        let _ = round;
+    }
+    // Whatever happened, every task is on a live node.
+    let j = broker.job(job).unwrap();
+    for k in 0..j.tasks.len() {
+        let node = j.node_of_task(k);
+        assert_eq!(broker.state(node), Some(NodeState::Active), "task {k} on dead node");
+    }
+    assert!(failures > 0, "churn scenario must actually kill nodes");
+    assert!(broker.events.iter().any(|e| matches!(e, Event::Rescheduled { .. })));
+}
+
+#[test]
+fn dht_data_survives_provider_churn() {
+    let mut dht = Dht::new(3);
+    for p in 0..8 {
+        dht.join(p).unwrap();
+    }
+    let dht = Arc::new(std::sync::Mutex::new(dht));
+    let corpus = SyntheticCorpus::new(128, 8, 2);
+    let provider = DataProvider::new(corpus.clone(), dht.clone());
+    for step in 0..5 {
+        provider.publish_step(step, 4).unwrap();
+    }
+    // Two storage peers die.
+    {
+        let mut d = dht.lock().unwrap();
+        d.leave(0).unwrap();
+        d.leave(3).unwrap();
+    }
+    // Every batch is still retrievable and identical.
+    for step in 0..5 {
+        for mb in 0..4 {
+            let t = fusionai::cluster::data::fetch_tokens(&dht, step, mb, "tokens", &[2, 8])
+                .unwrap();
+            let (want, _) = corpus.batch((step * 4 + mb) as u64);
+            assert_eq!(t, want);
+        }
+    }
+}
+
+#[test]
+fn repeated_crash_recover_cycles_keep_training() {
+    let cfg = TransformerConfig::tiny();
+    let g = cfg.build_graph();
+    let d = Decomposition::chain_balanced(&g, 4);
+    let net = Arc::new(NetworkSim::new(Topology::uniform(LinkModel::local()), 0.0));
+    let mut cluster = SimCluster::new(
+        g,
+        d,
+        net,
+        Box::new(|| Box::new(RefEngine::new())),
+        Box::new(|| Box::new(Adam::new(0.01))),
+        3,
+    )
+    .unwrap();
+    let feed = |c: &mut SimCluster| {
+        let tokens: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|i| ((i * 3 + 1) % cfg.vocab) as i32).collect();
+        let labels: Vec<i32> =
+            tokens.iter().map(|&t| ((t as usize + 3) % cfg.vocab) as i32).collect();
+        c.feed("tokens", Tensor::from_ivec(&[cfg.batch, cfg.seq], tokens)).unwrap();
+        c.feed("labels", Tensor::from_ivec(&[cfg.batch, cfg.seq], labels)).unwrap();
+    };
+    let mut rng = Rng::new(77);
+    let mut last = f32::INFINITY;
+    let mut first = None;
+    for step in 0..30 {
+        // Crash a random compnode every 6 steps, recover immediately.
+        if step % 6 == 5 {
+            let victim = rng.below(4) as usize;
+            cluster.fail_compnode(victim);
+            cluster.recover_compnode(victim).unwrap();
+        }
+        feed(&mut cluster);
+        let r = cluster.train_step().unwrap();
+        let l = r.loss.unwrap();
+        first.get_or_insert(l);
+        last = l;
+    }
+    assert!(
+        last < first.unwrap() * 0.9,
+        "training with churn every 6 steps must still converge: {first:?} → {last}"
+    );
+}
+
+#[test]
+fn backup_pool_exhaustion_reported() {
+    let mut broker = Broker::new(1.0);
+    let gpu = lookup("RTX 3080").unwrap();
+    broker.register(gpu, 0.5, NodeClass::Antnode, 0.0, false);
+    broker.register(gpu, 0.5, NodeClass::Antnode, 0.0, true);
+    assert!(broker.promote_backup(0).is_some());
+    assert!(broker.promote_backup(0).is_none(), "pool exhausted");
+}
+
+#[test]
+fn rejoin_after_offline_gets_fresh_id() {
+    // The paper gives each registration a unique id; a returning provider
+    // re-registers rather than resurrecting its old id.
+    let mut broker = Broker::new(1.0);
+    let gpu = lookup("RTX 3080").unwrap();
+    let a = broker.register(gpu, 0.5, NodeClass::Antnode, 0.0, false);
+    broker.deregister(a);
+    let b = broker.register(gpu, 0.5, NodeClass::Antnode, 10.0, false);
+    assert_ne!(a, b);
+    assert_eq!(broker.state(a), Some(NodeState::Offline));
+    assert_eq!(broker.state(b), Some(NodeState::Active));
+}

@@ -1,0 +1,323 @@
+//! Property-based tests over the coordinator's core invariants
+//! (DESIGN.md §7): scheduler, DAG/decomposition, autodiff, DHT,
+//! compression and pipeline-schedule properties, each over hundreds of
+//! seeded random cases via the in-tree `proptesting` harness.
+
+use fusionai::compress::{topk, Codec};
+use fusionai::dag::autodiff::backward_plan;
+use fusionai::dag::{DType, Graph, OpCategory, OpKind, Shape};
+use fusionai::decompose::Decomposition;
+use fusionai::dht::Dht;
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::perf::gpus::GPU_DB;
+use fusionai::pipeline::schedule::{MicrobatchSchedule, PipeEventKind};
+use fusionai::proptesting::{check, Gen};
+use fusionai::sched::{self, PeerSpec, TaskSpec};
+
+fn random_tasks(g: &mut Gen, n: usize) -> Vec<TaskSpec> {
+    (0..n)
+        .map(|id| TaskSpec {
+            id,
+            flops: g.f64(1e9, 1e13),
+            gpu_bytes: g.usize(1, 1 << 28) as u64,
+            cpu_bytes: g.usize(1, 1 << 28) as u64,
+            disk_bytes: g.usize(1, 1 << 28) as u64,
+        })
+        .collect()
+}
+
+fn random_peers(g: &mut Gen, n: usize) -> Vec<PeerSpec> {
+    (0..n)
+        .map(|id| {
+            let gpu = g.choose(GPU_DB);
+            let mut p = sched::build::uniform_peers(gpu, g.f64(0.2, 0.9), 1).remove(0);
+            p.id = id;
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn prop_schedule_respects_all_constraints() {
+    check("schedule-constraints", 150, |g| {
+        let nt = g.usize(1, 40);
+        let np = g.usize(1, 12);
+        let tasks = random_tasks(g, nt);
+        let peers = random_peers(g, np);
+        match sched::schedule(&tasks, &peers) {
+            Ok(s) => {
+                s.validate(&tasks, &peers).map_err(|e| e)?;
+                // Makespan bounds: ≥ the largest single task on the fastest
+                // peer; ≤ serial time on the slowest peer.
+                let fastest = peers
+                    .iter()
+                    .map(|p| p.profile.achieved_flops())
+                    .fold(0.0f64, f64::max);
+                let slowest = peers
+                    .iter()
+                    .map(|p| p.profile.achieved_flops())
+                    .fold(f64::INFINITY, f64::min);
+                let lb = tasks.iter().map(|t| t.flops).fold(0.0f64, f64::max) / fastest;
+                let ub = tasks.iter().map(|t| t.flops).sum::<f64>() / slowest + 1e-9;
+                if s.makespan() < lb - 1e-9 {
+                    return Err(format!("makespan {} below lower bound {lb}", s.makespan()));
+                }
+                if s.makespan() > ub {
+                    return Err(format!("makespan {} above serial bound {ub}", s.makespan()));
+                }
+                Ok(())
+            }
+            // Infeasible is legal when memory genuinely doesn't fit anywhere.
+            Err(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_reschedule_preserves_validity() {
+    check("reschedule-validity", 100, |g| {
+        let nt = g.usize(2, 30);
+        let np = g.usize(3, 10);
+        let tasks = random_tasks(g, nt);
+        let peers = random_peers(g, np);
+        let Ok(mut s) = sched::schedule(&tasks, &peers) else { return Ok(()) };
+        let failed = g.usize(0, peers.len());
+        match sched::reschedule_failure(&mut s, &tasks, &peers, failed, None) {
+            Ok(_) => {
+                s.validate(&tasks, &peers).map_err(|e| e)?;
+                if s.of_task.iter().any(|&p| p == failed) {
+                    return Err("task left on failed peer".into());
+                }
+                Ok(())
+            }
+            Err(_) => Ok(()), // survivors genuinely can't hold it
+        }
+    });
+}
+
+#[test]
+fn prop_decomposition_partitions_exactly() {
+    check("decomposition-partition", 60, |g| {
+        let cfg = TransformerConfig {
+            name: "rand".into(),
+            vocab: 64 << g.usize(0, 3),
+            seq: 8 << g.usize(0, 2),
+            batch: 1 + g.usize(0, 3),
+            layers: 1 + g.usize(0, 5),
+            dim: 16 << g.usize(0, 2),
+            heads: 2,
+            ffn_hidden: 32,
+            causal: g.bool(0.5),
+            lm_head: g.bool(0.5),
+        };
+        let graph = cfg.build_graph();
+        let k = 1 + g.usize(0, graph.len().min(20));
+        let d = Decomposition::chain_balanced(&graph, k);
+        d.validate(&graph)?;
+        // Cut edges = exactly the cross-subgraph edges.
+        let cuts = d.cut_edges(&graph);
+        for &(a, b) in &cuts {
+            if d.of_node[a] == d.of_node[b] {
+                return Err("cut edge within one subgraph".into());
+            }
+        }
+        let mut expected = 0;
+        for node in &graph.nodes {
+            for &a in &node.args {
+                if d.of_node[a] != d.of_node[node.id] {
+                    expected += 1;
+                }
+            }
+        }
+        if cuts.len() != expected {
+            return Err(format!("{} cuts vs {} cross edges", cuts.len(), expected));
+        }
+        // Chain property: cuts only flow forward.
+        for (a, b) in cuts {
+            if d.of_node[a] > d.of_node[b] {
+                return Err("backward cut in chain decomposition".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_autodiff_covers_exactly_the_grad_flow() {
+    check("autodiff-coverage", 60, |g| {
+        let cfg = TransformerConfig::tiny();
+        let graph = cfg.build_graph();
+        let plan = backward_plan(&graph);
+        let _ = g.int(0, 2);
+        for node in &graph.nodes {
+            let has_task = plan.task(node.id).is_some();
+            match node.kind.category() {
+                OpCategory::Placeholder => {
+                    if has_task {
+                        return Err(format!("placeholder {} got a bwd task", node.name));
+                    }
+                }
+                OpCategory::Parametric | OpCategory::Variable => {
+                    if !has_task {
+                        return Err(format!("trainable {} lacks a bwd task", node.name));
+                    }
+                    if !plan.task(node.id).unwrap().wants_param_grad {
+                        return Err(format!("{} missing param grad", node.name));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dht_get_after_put_under_churn() {
+    check("dht-churn", 80, |g| {
+        let repl = g.usize(2, 4);
+        let mut dht = Dht::new(repl);
+        let n0 = g.usize(repl + 1, 12);
+        for p in 0..n0 {
+            dht.join(p).unwrap();
+        }
+        let n_keys = g.usize(5, 50);
+        for i in 0..n_keys {
+            dht.put(&format!("k{i}"), vec![i as u8]).unwrap();
+        }
+        // Random churn: kill up to repl−1 peers, add a few.
+        let kills = g.usize(0, repl);
+        for k in 0..kills {
+            let peers = dht.peers();
+            if peers.len() <= 1 {
+                break;
+            }
+            let victim = *g.choose(&peers);
+            dht.leave(victim).unwrap();
+            let _ = k;
+        }
+        for j in 0..g.usize(0, 3) {
+            dht.join(100 + j).unwrap();
+        }
+        for i in 0..n_keys {
+            let v = dht
+                .get(&format!("k{i}"))
+                .map_err(|e| format!("lost k{i}: {e}"))?;
+            if v != [i as u8] {
+                return Err(format!("k{i} corrupted"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codecs_roundtrip_contracts() {
+    check("codec-contracts", 150, |g| {
+        let n = g.usize(1, 4096);
+        let scale = g.f64(0.01, 100.0) as f32;
+        let x = g.vec_f32(n, scale);
+        // Raw: exact.
+        let c = Codec::None;
+        if c.decode(&c.encode(&x), n) != x {
+            return Err("raw roundtrip not exact".into());
+        }
+        // Int8: bounded error, exact wire size.
+        let c = Codec::Int8;
+        let enc = c.encode(&x);
+        if enc.len() as u64 != c.wire_bytes(n) {
+            return Err("int8 wire size mismatch".into());
+        }
+        let y = c.decode(&enc, n);
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let bound = amax / 127.0 / 2.0 + 1e-6;
+        for (a, b) in x.iter().zip(&y) {
+            if (a - b).abs() > bound {
+                return Err(format!("int8 error {} > bound {bound}", (a - b).abs()));
+            }
+        }
+        // TopK: preserves the k largest exactly, zeroes the rest.
+        let ratio = g.f64(0.01, 1.0);
+        let c = Codec::TopK { ratio };
+        let y = c.decode(&c.encode(&x), n);
+        let kept = topk(&x, ratio);
+        for (i, v) in &kept {
+            if y[*i] != *v {
+                return Err("topk lost a kept value".into());
+            }
+        }
+        let kept_set: std::collections::HashSet<usize> =
+            kept.iter().map(|&(i, _)| i).collect();
+        for (i, &v) in y.iter().enumerate() {
+            if !kept_set.contains(&i) && v != 0.0 {
+                return Err("topk leaked a non-kept value".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gpipe_schedule_dependencies_hold() {
+    check("gpipe-deps", 80, |g| {
+        let stages = g.usize(1, 6);
+        let mbs = g.usize(1, 10);
+        let s = MicrobatchSchedule::gpipe(stages, mbs);
+        // Per-stage: every Forward precedes every Backward of the same mb,
+        // Update is last.
+        for evs in &s.per_stage {
+            let pos = |kind: PipeEventKind, mb: usize| {
+                evs.iter().position(|e| e.kind == kind && e.microbatch == mb)
+            };
+            for mb in 0..mbs {
+                let f = pos(PipeEventKind::Forward, mb).ok_or("missing fwd")?;
+                let b = pos(PipeEventKind::Backward, mb).ok_or("missing bwd")?;
+                if f >= b {
+                    return Err(format!("fwd {f} after bwd {b}"));
+                }
+            }
+            if evs.last().unwrap().kind != PipeEventKind::Update {
+                return Err("update not last".into());
+            }
+        }
+        // Simulated makespan matches the GPipe closed form for equal costs.
+        let t = s.simulate(1.0, 1.0, 0.0);
+        let expect = (mbs as f64 + stages as f64 - 1.0) * 2.0;
+        if (t - expect).abs() > 1e-9 {
+            return Err(format!("makespan {t} vs closed form {expect}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_shape_inference_total() {
+    // Arbitrary small op chains never produce inconsistent shapes.
+    check("shape-inference", 120, |g| {
+        let mut graph = Graph::new();
+        let b = g.usize(1, 4);
+        let f = 4 << g.usize(0, 3);
+        let mut cur =
+            graph.placeholder("in", Shape::of(&[b, f]), DType::F32);
+        let depth = g.usize(1, 8);
+        for i in 0..depth {
+            let cur_f = *graph.node(cur).out_shape.dims().last().unwrap();
+            let kind = match g.usize(0, 4) {
+                0 => OpKind::Relu,
+                1 => OpKind::Gelu,
+                2 => OpKind::Softmax,
+                _ => OpKind::Linear {
+                    in_features: cur_f,
+                    out_features: 4 << g.usize(0, 3),
+                    bias: g.bool(0.5),
+                },
+            };
+            cur = graph.op(&format!("op{i}"), kind, &[cur]).map_err(|e| e.to_string())?;
+        }
+        graph.topo_order().map_err(|e| e.to_string())?;
+        if graph.node(cur).out_shape.dims()[0] != b {
+            return Err("batch dim changed".into());
+        }
+        Ok(())
+    });
+}
