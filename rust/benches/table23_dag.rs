@@ -5,9 +5,10 @@
 //! Run: `cargo bench --bench table23_dag`
 
 use fusionai::benchutil::{bench, Table};
-use fusionai::dag::NodeId;
+use fusionai::dag::{Graph, NodeId, PassManager};
 use fusionai::decompose::Decomposition;
 use fusionai::models::fig3;
+use fusionai::models::transformer::TransformerConfig;
 
 fn main() {
     let g = fig3::build();
@@ -91,4 +92,16 @@ fn main() {
         (0..3).map(|s| d.attrs(&g, s).outer_required.len()).sum::<usize>()
     });
     bench("fig3_graph_build", 10, 200, |_| fig3::build().len());
+
+    // Compiler-pipeline costs on a realistic training graph: the standard
+    // normalization pipeline and the serde round-trip.
+    let tiny = TransformerConfig::tiny().build_graph();
+    bench("passmanager_standard_tiny", 10, 50, |_| {
+        let mut g = tiny.clone();
+        PassManager::standard().run(&mut g).unwrap();
+        g.len()
+    });
+    bench("graph_json_roundtrip_tiny", 10, 50, |_| {
+        Graph::from_json(&tiny.to_json()).unwrap().len()
+    });
 }

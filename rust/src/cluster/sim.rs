@@ -18,7 +18,7 @@ use anyhow::{anyhow, Result};
 
 use crate::compnode::SubDagExecutor;
 use crate::dag::autodiff::{backward_plan, BackwardPlan};
-use crate::dag::{Graph, NodeId, OpCategory};
+use crate::dag::{Graph, NodeId, OpCategory, PassManager};
 use crate::decompose::Decomposition;
 use crate::exec::{Engine, Optimizer};
 use crate::net::NetworkSim;
@@ -55,13 +55,16 @@ pub struct SimCluster {
 
 impl SimCluster {
     pub fn new(
-        graph: Graph,
+        mut graph: Graph,
         decomp: Decomposition,
         net: Arc<NetworkSim>,
         engine_factory: Box<dyn Fn() -> Box<dyn Engine>>,
         opt_factory: Box<dyn Fn() -> Box<dyn Optimizer>>,
         seed: u64,
     ) -> Result<SimCluster> {
+        // Reject malformed graphs up front (stale shapes, broken reverse
+        // adjacency, cycles) — id-stable, so the decomposition stays valid.
+        PassManager::validation().run(&mut graph)?;
         let graph = Arc::new(graph);
         let decomp = Arc::new(decomp);
         let plan = backward_plan(&graph);

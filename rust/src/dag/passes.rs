@@ -1,0 +1,348 @@
+//! Pass-based graph transformation pipeline.
+//!
+//! Graph rewrites are composable [`GraphPass`]es run by a [`PassManager`]
+//! (the shape FusionLLM's adaptive-compression rewrites assume). A pass
+//! mutates the graph in place and reports whether anything changed; the
+//! manager chains passes and returns a per-pass [`PassReport`].
+//!
+//! Passes that remove nodes ([`DeadNodeElimination`], via folding) compact
+//! node ids — run them *before* taking `NodeId` references into the graph,
+//! not after.
+
+use super::ir::{infer_shape, DType, Graph, GraphError, NodeId, OpKind, Shape};
+
+/// One composable graph transformation.
+pub trait GraphPass {
+    /// Stable pass name for reports and logs.
+    fn name(&self) -> &'static str;
+    /// Run over `g`; `Ok(true)` iff the graph was modified.
+    fn run(&self, g: &mut Graph) -> Result<bool, GraphError>;
+}
+
+/// Ordered pipeline of passes.
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<Box<dyn GraphPass>>,
+}
+
+/// Which passes ran and whether each changed the graph.
+#[derive(Debug, Clone)]
+pub struct PassReport {
+    pub entries: Vec<(&'static str, bool)>,
+}
+
+impl PassReport {
+    /// True iff any pass modified the graph.
+    pub fn changed(&self) -> bool {
+        self.entries.iter().any(|&(_, c)| c)
+    }
+}
+
+impl PassManager {
+    /// Empty pipeline; add passes with [`PassManager::with_pass`].
+    pub fn new() -> PassManager {
+        PassManager::default()
+    }
+
+    /// The standard normalization pipeline: re-infer shapes, fold
+    /// structural identities, drop dead nodes, then validate invariants.
+    pub fn standard() -> PassManager {
+        PassManager::new()
+            .with_pass(ShapeInference)
+            .with_pass(ConstantFolding)
+            .with_pass(DeadNodeElimination)
+            .with_pass(TopoValidate)
+    }
+
+    /// Validation only — no rewrites, `NodeId`s stay stable.
+    pub fn validation() -> PassManager {
+        PassManager::new().with_pass(ShapeInference).with_pass(TopoValidate)
+    }
+
+    pub fn with_pass(mut self, p: impl GraphPass + 'static) -> PassManager {
+        self.passes.push(Box::new(p));
+        self
+    }
+
+    pub fn run(&self, g: &mut Graph) -> Result<PassReport, GraphError> {
+        let mut entries = Vec::with_capacity(self.passes.len());
+        for p in &self.passes {
+            entries.push((p.name(), p.run(g)?));
+        }
+        Ok(PassReport { entries })
+    }
+}
+
+/// Recompute output shapes/dtypes in topological order.
+///
+/// Leaves keep their declared shapes and `StageCall` nodes keep their
+/// builder-set overrides (the artifact, not the IR, owns stage shapes);
+/// every other node is re-derived through [`infer_shape`], so stale shapes
+/// after a rewrite become consistent again — or surface as a
+/// [`GraphError::Shape`].
+pub struct ShapeInference;
+
+impl GraphPass for ShapeInference {
+    fn name(&self) -> &'static str {
+        "shape-inference"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool, GraphError> {
+        let order = g.topo_order()?;
+        let mut changed = false;
+        for id in order {
+            match g.nodes[id].kind {
+                OpKind::Placeholder | OpKind::Variable | OpKind::StageCall { .. } => continue,
+                _ => {}
+            }
+            let arg_meta: Vec<(Shape, DType)> = g.nodes[id]
+                .args
+                .iter()
+                .map(|&a| (g.nodes[a].out_shape.clone(), g.nodes[a].out_dtype))
+                .collect();
+            let refs: Vec<(&Shape, DType)> = arg_meta.iter().map(|(s, d)| (s, *d)).collect();
+            let node = &g.nodes[id];
+            let (shape, dtype) = infer_shape(&node.name, &node.kind, &refs)?;
+            if g.nodes[id].out_shape != shape || g.nodes[id].out_dtype != dtype {
+                g.nodes[id].out_shape = shape;
+                g.nodes[id].out_dtype = dtype;
+                changed = true;
+            }
+        }
+        Ok(changed)
+    }
+}
+
+/// Fold structural identities by redirecting consumers past no-op nodes.
+///
+/// The IR carries no literal tensor constants, so classic constant folding
+/// degenerates to identity elimination: `Relu(Relu(x)) → Relu(x)`,
+/// 1×1/stride-1 `MaxPool2d(x) → x`, single-input `Concat(x) → x`. Folded
+/// nodes are left dead for [`DeadNodeElimination`] to sweep.
+pub struct ConstantFolding;
+
+impl GraphPass for ConstantFolding {
+    fn name(&self) -> &'static str {
+        "constant-folding"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool, GraphError> {
+        let mut changed = false;
+        for id in 0..g.len() {
+            let replacement: Option<NodeId> = match &g.nodes[id].kind {
+                OpKind::MaxPool2d { kernel: 1, stride: 1 } => Some(g.nodes[id].args[0]),
+                OpKind::Concat { .. } if g.nodes[id].args.len() == 1 => {
+                    Some(g.nodes[id].args[0])
+                }
+                OpKind::Relu => {
+                    let a = g.nodes[id].args[0];
+                    matches!(g.nodes[a].kind, OpKind::Relu).then_some(a)
+                }
+                _ => None,
+            };
+            if let Some(to) = replacement {
+                if g.redirect_users(id, to) > 0 {
+                    changed = true;
+                }
+            }
+        }
+        Ok(changed)
+    }
+}
+
+/// Remove nodes that cannot influence any root.
+///
+/// Roots are the loss nodes when the graph has any (training graphs), else
+/// every sink (inference graphs — conservative, removes nothing). Removal
+/// compacts node ids; callers holding `NodeId`s must re-resolve by name.
+pub struct DeadNodeElimination;
+
+impl GraphPass for DeadNodeElimination {
+    fn name(&self) -> &'static str {
+        "dead-node-elimination"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool, GraphError> {
+        let losses = g.loss_nodes();
+        let roots: Vec<NodeId> = if losses.is_empty() {
+            (0..g.len()).filter(|&i| g.users(i).is_empty()).collect()
+        } else {
+            losses
+        };
+        let mut live = vec![false; g.len()];
+        let mut stack = roots;
+        while let Some(id) = stack.pop() {
+            if std::mem::replace(&mut live[id], true) {
+                continue;
+            }
+            stack.extend(g.nodes[id].args.iter().copied());
+        }
+        if live.iter().all(|&l| l) {
+            return Ok(false);
+        }
+        g.retain_nodes(&live)?;
+        Ok(true)
+    }
+}
+
+/// Pure validation: dense ids, in-bounds args, unique names, reverse
+/// adjacency consistent with `args`, and acyclicity. Never mutates.
+pub struct TopoValidate;
+
+impl GraphPass for TopoValidate {
+    fn name(&self) -> &'static str {
+        "topo-validate"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool, GraphError> {
+        let n = g.len();
+        let mut names = std::collections::BTreeSet::new();
+        for (i, node) in g.nodes.iter().enumerate() {
+            if node.id != i {
+                return Err(GraphError::Invalid(format!(
+                    "node '{}' has id {} at index {i}",
+                    node.name, node.id
+                )));
+            }
+            if !names.insert(node.name.as_str()) {
+                return Err(GraphError::DuplicateName(node.name.clone()));
+            }
+            for &a in &node.args {
+                if a >= n {
+                    return Err(GraphError::UnknownNode(a));
+                }
+            }
+        }
+        // Reverse adjacency must be exactly the transpose of `args`.
+        let mut expected: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for node in &g.nodes {
+            for &a in &node.args {
+                expected[a].push(node.id);
+            }
+        }
+        for i in 0..n {
+            let mut got = g.users(i).to_vec();
+            got.sort_unstable();
+            let mut want = expected[i].clone();
+            want.sort_unstable();
+            if got != want {
+                return Err(GraphError::Invalid(format!(
+                    "reverse adjacency of node {i} is {got:?}, expected {want:?}"
+                )));
+            }
+        }
+        g.topo_order()?;
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::ir::{DType, OpKind, Shape};
+    use crate::models::transformer::TransformerConfig;
+
+    /// Training graph with a relu chain, an identity pool and a dead branch.
+    fn messy_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[1, 2, 4, 4]), DType::F32);
+        let y = g.placeholder("y", Shape::of(&[1, 2, 4, 4]), DType::F32);
+        let r1 = g.op("r1", OpKind::Relu, &[x]).unwrap();
+        let r2 = g.op("r2", OpKind::Relu, &[r1]).unwrap();
+        let p = g.op("p", OpKind::MaxPool2d { kernel: 1, stride: 1 }, &[r2]).unwrap();
+        // Dead branch: never reaches the loss.
+        let dead = g.op("dead", OpKind::Gelu, &[p]).unwrap();
+        g.op("dead2", OpKind::Softmax, &[dead]).unwrap();
+        g.op("loss", OpKind::MseLoss, &[p, y]).unwrap();
+        g
+    }
+
+    #[test]
+    fn folding_then_dce_shrinks_messy_graph() {
+        let mut g = messy_graph();
+        let report = PassManager::standard().run(&mut g).unwrap();
+        assert!(report.changed());
+        // r2 (relu-of-relu), p (identity pool), dead, dead2 all gone.
+        assert!(g.by_name("r2").is_none());
+        assert!(g.by_name("p").is_none());
+        assert!(g.by_name("dead").is_none());
+        assert!(g.by_name("dead2").is_none());
+        assert!(g.by_name("r1").is_some());
+        // Loss now reads r1 directly.
+        let loss = g.by_name("loss").unwrap();
+        let r1 = g.by_name("r1").unwrap().id;
+        assert_eq!(loss.args[0], r1);
+        g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn standard_pipeline_is_idempotent() {
+        let mut g = messy_graph();
+        let pm = PassManager::standard();
+        pm.run(&mut g).unwrap();
+        let snapshot = crate::dag::serde::to_json(&g);
+        let second = pm.run(&mut g).unwrap();
+        assert!(!second.changed(), "second run changed the graph: {:?}", second.entries);
+        assert_eq!(crate::dag::serde::to_json(&g), snapshot);
+    }
+
+    #[test]
+    fn transformer_graph_is_already_normal() {
+        // The e2e training graph contains no foldable patterns and no dead
+        // nodes — the standard pipeline must be a structural no-op (this is
+        // what makes PassManager safe on the training path).
+        let mut g = TransformerConfig::tiny().build_graph();
+        let before = crate::dag::serde::to_json(&g);
+        let report = PassManager::standard().run(&mut g).unwrap();
+        assert!(!report.changed(), "{:?}", report.entries);
+        assert_eq!(crate::dag::serde::to_json(&g), before);
+    }
+
+    #[test]
+    fn shape_inference_repairs_stale_shapes() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 8]), DType::F32);
+        let l = g
+            .op("fc", OpKind::Linear { in_features: 8, out_features: 4, bias: true }, &[x])
+            .unwrap();
+        let r = g.op("r", OpKind::Relu, &[l]).unwrap();
+        // Corrupt downstream shapes, as a rewrite that forgot to re-infer would.
+        g.set_shape(r, Shape::of(&[99]), DType::F32);
+        let changed = ShapeInference.run(&mut g).unwrap();
+        assert!(changed);
+        assert_eq!(g.node(r).out_shape, Shape::of(&[2, 4]));
+        // Second run: fixpoint.
+        assert!(!ShapeInference.run(&mut g).unwrap());
+    }
+
+    #[test]
+    fn shape_inference_preserves_stagecall_overrides() {
+        use crate::models::transformer::{pipeline_graph, PipelineSpec};
+        let spec = PipelineSpec::new(TransformerConfig::tiny(), 2);
+        let mut g = pipeline_graph(&spec);
+        let head_shape = g.by_name("head").map(|n| n.out_shape.clone());
+        assert!(!ShapeInference.run(&mut g).unwrap());
+        assert_eq!(g.by_name("head").map(|n| n.out_shape.clone()), head_shape);
+    }
+
+    #[test]
+    fn dce_keeps_sinks_without_loss() {
+        // Inference graph: no loss ⇒ sinks are roots ⇒ nothing removed.
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 4]), DType::F32);
+        g.op("a", OpKind::Relu, &[x]).unwrap();
+        g.op("b", OpKind::Gelu, &[x]).unwrap();
+        assert!(!DeadNodeElimination.run(&mut g).unwrap());
+        assert_eq!(g.len(), 3);
+    }
+
+    #[test]
+    fn validate_catches_broken_reverse_adjacency() {
+        let mut g = messy_graph();
+        assert!(TopoValidate.run(&mut g).is_ok());
+        // Sever an arg directly (bypassing the builder) — users go stale.
+        let loss = g.by_name("loss").unwrap().id;
+        g.nodes[loss].args[0] = g.by_name("x").unwrap().id;
+        assert!(TopoValidate.run(&mut g).is_err());
+    }
+}

@@ -1,0 +1,319 @@
+//! Graph ⇄ JSON serialization.
+//!
+//! The IR plane is the interchange format between the coordinator and
+//! compute nodes (paper §3.5): a graph serialized here can be shipped over
+//! the broker, deserialized with [`from_json`] and executed on any plane.
+//! `to_json` → `from_json` is lossless: kinds (with all structural
+//! hyperparameters), args, kwargs, shapes and dtypes round-trip exactly.
+
+use std::collections::BTreeMap;
+
+use super::ir::{DType, Graph, GraphError, Node, OpKind, Shape};
+use crate::util::json::{parse, Json};
+
+/// Serialize a graph to compact JSON.
+pub fn to_json(g: &Graph) -> String {
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            Json::obj(vec![
+                ("id", Json::Num(n.id as f64)),
+                ("name", Json::Str(n.name.clone())),
+                ("kind", kind_to_json(&n.kind)),
+                ("args", Json::Arr(n.args.iter().map(|&a| Json::Num(a as f64)).collect())),
+                (
+                    "kwargs",
+                    Json::Obj(
+                        n.kwargs
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "shape",
+                    Json::Arr(n.out_shape.dims().iter().map(|&d| Json::Num(d as f64)).collect()),
+                ),
+                ("dtype", Json::Str(n.out_dtype.to_string())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("nodes", Json::Arr(nodes))]).to_string()
+}
+
+/// Deserialize a graph produced by [`to_json`]. Validates ids, args,
+/// names and acyclicity; declared shapes are trusted (not re-inferred) so
+/// `set_shape` overrides on `StageCall` graphs survive the round-trip.
+pub fn from_json(src: &str) -> Result<Graph, GraphError> {
+    let doc = parse(src).map_err(|e| GraphError::Invalid(format!("bad JSON: {e}")))?;
+    let nodes_json = doc
+        .get("nodes")
+        .and_then(|n| n.as_arr())
+        .ok_or_else(|| GraphError::Invalid("missing 'nodes' array".into()))?;
+    let mut nodes = Vec::with_capacity(nodes_json.len());
+    for (i, nj) in nodes_json.iter().enumerate() {
+        let field = |key: &str| {
+            nj.get(key).ok_or_else(|| {
+                GraphError::Invalid(format!("node {i}: missing field '{key}'"))
+            })
+        };
+        let id = field("id")?
+            .as_usize()
+            .ok_or_else(|| GraphError::Invalid(format!("node {i}: bad id")))?;
+        let name = field("name")?
+            .as_str()
+            .ok_or_else(|| GraphError::Invalid(format!("node {i}: bad name")))?
+            .to_string();
+        let kind = kind_from_json(field("kind")?)
+            .map_err(|msg| GraphError::Invalid(format!("node '{name}': {msg}")))?;
+        let args = field("args")?
+            .as_arr()
+            .ok_or_else(|| GraphError::Invalid(format!("node '{name}': bad args")))?
+            .iter()
+            .map(|a| {
+                a.as_usize()
+                    .ok_or_else(|| GraphError::Invalid(format!("node '{name}': bad arg")))
+            })
+            .collect::<Result<Vec<usize>, GraphError>>()?;
+        let mut kwargs = BTreeMap::new();
+        if let Some(kw) = nj.get("kwargs").and_then(|k| k.as_obj()) {
+            for (k, v) in kw {
+                let s = v.as_str().ok_or_else(|| {
+                    GraphError::Invalid(format!("node '{name}': kwarg '{k}' not a string"))
+                })?;
+                kwargs.insert(k.clone(), s.to_string());
+            }
+        }
+        let dims = field("shape")?
+            .as_arr()
+            .ok_or_else(|| GraphError::Invalid(format!("node '{name}': bad shape")))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| GraphError::Invalid(format!("node '{name}': bad dim")))
+            })
+            .collect::<Result<Vec<usize>, GraphError>>()?;
+        let dtype = match field("dtype")?.as_str() {
+            Some("f32") => DType::F32,
+            Some("i32") => DType::I32,
+            other => {
+                return Err(GraphError::Invalid(format!(
+                    "node '{name}': unknown dtype {other:?}"
+                )))
+            }
+        };
+        nodes.push(Node {
+            id,
+            name,
+            kind,
+            args,
+            kwargs,
+            out_shape: Shape(dims),
+            out_dtype: dtype,
+        });
+    }
+    Graph::from_nodes(nodes)
+}
+
+fn kind_to_json(kind: &OpKind) -> Json {
+    use OpKind::*;
+    let num = |v: usize| Json::Num(v as f64);
+    let mut fields: Vec<(&str, Json)> = vec![("op", Json::Str(variant_tag(kind).into()))];
+    match kind {
+        Placeholder | Variable | Add | Multiply | Relu | Gelu | Softmax | MseLoss => {}
+        Conv2d { in_ch, out_ch, kernel, stride, padding } => {
+            fields.push(("in_ch", num(*in_ch)));
+            fields.push(("out_ch", num(*out_ch)));
+            fields.push(("kernel", num(*kernel)));
+            fields.push(("stride", num(*stride)));
+            fields.push(("padding", num(*padding)));
+        }
+        Linear { in_features, out_features, bias } => {
+            fields.push(("in_features", num(*in_features)));
+            fields.push(("out_features", num(*out_features)));
+            fields.push(("bias", Json::Bool(*bias)));
+        }
+        Embedding { vocab, dim } => {
+            fields.push(("vocab", num(*vocab)));
+            fields.push(("dim", num(*dim)));
+        }
+        LayerNorm { dim } => fields.push(("dim", num(*dim))),
+        Attention { heads, dim, causal } => {
+            fields.push(("heads", num(*heads)));
+            fields.push(("dim", num(*dim)));
+            fields.push(("causal", Json::Bool(*causal)));
+        }
+        FeedForward { dim, hidden } => {
+            fields.push(("dim", num(*dim)));
+            fields.push(("hidden", num(*hidden)));
+        }
+        MaxPool2d { kernel, stride } => {
+            fields.push(("kernel", num(*kernel)));
+            fields.push(("stride", num(*stride)));
+        }
+        Concat { axis } => fields.push(("axis", num(*axis))),
+        CrossEntropy { weight } => fields.push(("weight", Json::Num(*weight))),
+        StageCall { stage, param_count, flops, param_bytes } => {
+            fields.push(("stage", Json::Str(stage.clone())));
+            fields.push(("param_count", num(*param_count)));
+            fields.push(("flops", Json::Num(*flops)));
+            fields.push(("param_bytes", Json::Num(*param_bytes as f64)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn variant_tag(kind: &OpKind) -> &'static str {
+    use OpKind::*;
+    match kind {
+        Placeholder => "Placeholder",
+        Variable => "Variable",
+        Conv2d { .. } => "Conv2d",
+        Linear { .. } => "Linear",
+        Embedding { .. } => "Embedding",
+        LayerNorm { .. } => "LayerNorm",
+        Attention { .. } => "Attention",
+        FeedForward { .. } => "FeedForward",
+        Add => "Add",
+        Multiply => "Multiply",
+        Relu => "Relu",
+        Gelu => "Gelu",
+        Softmax => "Softmax",
+        MaxPool2d { .. } => "MaxPool2d",
+        Concat { .. } => "Concat",
+        CrossEntropy { .. } => "CrossEntropy",
+        MseLoss => "MseLoss",
+        StageCall { .. } => "StageCall",
+    }
+}
+
+fn kind_from_json(j: &Json) -> Result<OpKind, String> {
+    let tag = j.get("op").and_then(|t| t.as_str()).ok_or("kind missing 'op' tag")?;
+    let us = |key: &str| -> Result<usize, String> {
+        j.get(key).and_then(|v| v.as_usize()).ok_or(format!("kind missing '{key}'"))
+    };
+    let b = |key: &str| -> Result<bool, String> {
+        j.get(key).and_then(|v| v.as_bool()).ok_or(format!("kind missing '{key}'"))
+    };
+    Ok(match tag {
+        "Placeholder" => OpKind::Placeholder,
+        "Variable" => OpKind::Variable,
+        "Conv2d" => OpKind::Conv2d {
+            in_ch: us("in_ch")?,
+            out_ch: us("out_ch")?,
+            kernel: us("kernel")?,
+            stride: us("stride")?,
+            padding: us("padding")?,
+        },
+        "Linear" => OpKind::Linear {
+            in_features: us("in_features")?,
+            out_features: us("out_features")?,
+            bias: b("bias")?,
+        },
+        "Embedding" => OpKind::Embedding { vocab: us("vocab")?, dim: us("dim")? },
+        "LayerNorm" => OpKind::LayerNorm { dim: us("dim")? },
+        "Attention" => OpKind::Attention {
+            heads: us("heads")?,
+            dim: us("dim")?,
+            causal: b("causal")?,
+        },
+        "FeedForward" => OpKind::FeedForward { dim: us("dim")?, hidden: us("hidden")? },
+        "Add" => OpKind::Add,
+        "Multiply" => OpKind::Multiply,
+        "Relu" => OpKind::Relu,
+        "Gelu" => OpKind::Gelu,
+        "Softmax" => OpKind::Softmax,
+        "MaxPool2d" => OpKind::MaxPool2d { kernel: us("kernel")?, stride: us("stride")? },
+        "Concat" => OpKind::Concat { axis: us("axis")? },
+        "CrossEntropy" => OpKind::CrossEntropy {
+            weight: j.get("weight").and_then(|v| v.as_f64()).ok_or("kind missing 'weight'")?,
+        },
+        "MseLoss" => OpKind::MseLoss,
+        "StageCall" => OpKind::StageCall {
+            stage: j
+                .get("stage")
+                .and_then(|v| v.as_str())
+                .ok_or("kind missing 'stage'")?
+                .to_string(),
+            param_count: us("param_count")?,
+            flops: j.get("flops").and_then(|v| v.as_f64()).ok_or("kind missing 'flops'")?,
+            param_bytes: j
+                .get("param_bytes")
+                .and_then(|v| v.as_f64())
+                .ok_or("kind missing 'param_bytes'")? as u64,
+        },
+        other => return Err(format!("unknown op tag '{other}'")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::fig3;
+    use crate::models::transformer::{pipeline_graph, PipelineSpec, TransformerConfig};
+
+    fn assert_roundtrip(g: &Graph) {
+        let json = to_json(g);
+        let back = from_json(&json).expect("from_json");
+        assert_eq!(back.len(), g.len());
+        for (a, b) in g.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind, "kind mismatch at '{}'", a.name);
+            assert_eq!(a.args, b.args);
+            assert_eq!(a.kwargs, b.kwargs);
+            assert_eq!(a.out_shape, b.out_shape);
+            assert_eq!(a.out_dtype, b.out_dtype);
+        }
+        for id in 0..g.len() {
+            assert_eq!(g.users(id), back.users(id), "users mismatch at node {id}");
+        }
+        // Second hop is byte-identical (canonical form).
+        assert_eq!(to_json(&back), json);
+    }
+
+    #[test]
+    fn roundtrip_transformer() {
+        assert_roundtrip(&TransformerConfig::tiny().build_graph());
+    }
+
+    #[test]
+    fn roundtrip_fig3_with_kwargs() {
+        // fig3 carries kwargs and conv/pool/concat kinds.
+        assert_roundtrip(&fig3::build());
+    }
+
+    #[test]
+    fn roundtrip_stagecall_pipeline() {
+        // StageCall kinds carry name/param/flop payloads and set_shape
+        // overrides; all must survive.
+        let spec = PipelineSpec::new(TransformerConfig::tiny(), 2);
+        assert_roundtrip(&pipeline_graph(&spec));
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(from_json("not json").is_err());
+        assert!(from_json("{}").is_err());
+        assert!(from_json(r#"{"nodes":[{"id":0}]}"#).is_err());
+        // Arg out of range.
+        let bad = r#"{"nodes":[{"id":0,"name":"x","kind":{"op":"Relu"},"args":[7],"kwargs":{},"shape":[2],"dtype":"f32"}]}"#;
+        assert!(from_json(bad).is_err());
+        // Unknown op tag.
+        let bad = r#"{"nodes":[{"id":0,"name":"x","kind":{"op":"Wat"},"args":[],"kwargs":{},"shape":[2],"dtype":"f32"}]}"#;
+        assert!(from_json(bad).is_err());
+    }
+
+    #[test]
+    fn kwargs_preserved() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 4]), DType::F32);
+        let r = g.op("r", OpKind::Relu, &[x]).unwrap();
+        g.set_kwarg(r, "device", "cuda:1");
+        g.set_kwarg(r, "subgraph", "3");
+        let back = from_json(&to_json(&g)).unwrap();
+        assert_eq!(back.node(r).kwargs.get("device").map(String::as_str), Some("cuda:1"));
+        assert_eq!(back.node(r).kwargs.get("subgraph").map(String::as_str), Some("3"));
+    }
+}

@@ -12,6 +12,10 @@
 //! * **Outwards data** — local nodes whose outputs other compnodes consume;
 //! * **Compnode users** — the set of downstream sub-graphs.
 
+pub mod passes;
+
+pub use passes::{ChainPartitionPass, SUBGRAPH_KEY};
+
 use std::collections::BTreeSet;
 
 use crate::dag::{flops, Graph, NodeId};

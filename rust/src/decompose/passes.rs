@@ -1,0 +1,110 @@
+//! Stage partitioning as a compiler pass.
+//!
+//! [`ChainPartitionPass`] runs the §4 min-max chain decomposition inside the
+//! [`PassManager`](crate::dag::PassManager) pipeline and records the result
+//! *in the graph itself*: every node gets a `"subgraph"` kwarg (Table 2
+//! "Kwargs") naming its pipeline segment. Downstream consumers recover the
+//! partition with [`Decomposition::from_kwargs`] instead of re-running the
+//! DP, so a serialized graph carries its own placement.
+
+use crate::dag::{Graph, GraphError, GraphPass};
+use crate::decompose::Decomposition;
+
+/// Kwarg key under which the pass stores each node's segment index.
+pub const SUBGRAPH_KEY: &str = "subgraph";
+
+/// Annotate every node with its min-max balanced chain segment.
+pub struct ChainPartitionPass {
+    pub k: usize,
+}
+
+impl ChainPartitionPass {
+    pub fn new(k: usize) -> ChainPartitionPass {
+        assert!(k > 0, "need at least one segment");
+        ChainPartitionPass { k }
+    }
+}
+
+impl GraphPass for ChainPartitionPass {
+    fn name(&self) -> &'static str {
+        "chain-partition"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool, GraphError> {
+        let d = Decomposition::chain_balanced(g, self.k);
+        let mut changed = false;
+        for id in 0..g.len() {
+            let val = d.of_node[id].to_string();
+            if g.node(id).kwargs.get(SUBGRAPH_KEY) != Some(&val) {
+                g.set_kwarg(id, SUBGRAPH_KEY, &val);
+                changed = true;
+            }
+        }
+        Ok(changed)
+    }
+}
+
+impl Decomposition {
+    /// Rebuild a partition from the `"subgraph"` kwargs written by
+    /// [`ChainPartitionPass`] (or hand-annotated / deserialized graphs).
+    pub fn from_kwargs(g: &Graph) -> Result<Decomposition, GraphError> {
+        let mut assign = Vec::with_capacity(g.len());
+        for node in &g.nodes {
+            let raw = node.kwargs.get(SUBGRAPH_KEY).ok_or_else(|| {
+                GraphError::Invalid(format!(
+                    "node '{}' has no '{SUBGRAPH_KEY}' kwarg — run ChainPartitionPass first",
+                    node.name
+                ))
+            })?;
+            let seg: usize = raw.parse().map_err(|_| {
+                GraphError::Invalid(format!(
+                    "node '{}': bad '{SUBGRAPH_KEY}' kwarg '{raw}'",
+                    node.name
+                ))
+            })?;
+            assign.push((node.id, seg));
+        }
+        Ok(Decomposition::from_assignment(g, &assign))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::PassManager;
+    use crate::models::transformer::TransformerConfig;
+
+    #[test]
+    fn pass_annotates_and_roundtrips() {
+        let mut g = TransformerConfig::tiny().build_graph();
+        let direct = Decomposition::chain_balanced(&g, 4);
+
+        let report =
+            PassManager::new().with_pass(ChainPartitionPass::new(4)).run(&mut g).unwrap();
+        assert!(report.changed());
+
+        let via_kwargs = Decomposition::from_kwargs(&g).unwrap();
+        via_kwargs.validate(&g).unwrap();
+        assert_eq!(via_kwargs.of_node, direct.of_node);
+
+        // Re-running is a no-op: annotations already match.
+        let again =
+            PassManager::new().with_pass(ChainPartitionPass::new(4)).run(&mut g).unwrap();
+        assert!(!again.changed());
+    }
+
+    #[test]
+    fn kwargs_survive_json_roundtrip() {
+        let mut g = TransformerConfig::tiny().build_graph();
+        ChainPartitionPass::new(3).run(&mut g).unwrap();
+        let g2 = crate::dag::Graph::from_json(&g.to_json()).unwrap();
+        let d2 = Decomposition::from_kwargs(&g2).unwrap();
+        assert_eq!(d2.of_node, Decomposition::from_kwargs(&g).unwrap().of_node);
+    }
+
+    #[test]
+    fn from_kwargs_requires_annotations() {
+        let g = TransformerConfig::tiny().build_graph();
+        assert!(Decomposition::from_kwargs(&g).is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Multi-head self-attention kernel over `[B, S, D]`.
+//! params = [Wqkv, bqkv, Wo, bo].
+
+use anyhow::{bail, Result};
+
+use super::{add_row_bias, sum_rows, OpKernel};
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+use crate::util::Rng;
+
+pub struct AttentionKernel;
+
+fn unpack(node: &Node) -> Result<(usize, usize, bool)> {
+    match node.kind {
+        OpKind::Attention { heads, dim, causal } => Ok((heads, dim, causal)),
+        _ => bail!("AttentionKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for AttentionKernel {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+
+    fn init_params(&self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        let (_, dim, _) = unpack(node)?;
+        let std = 1.0 / (dim as f32).sqrt();
+        Ok(vec![
+            Tensor::randn(&[dim, 3 * dim], std, rng),
+            Tensor::zeros(&[3 * dim]),
+            Tensor::randn(&[dim, dim], std, rng),
+            Tensor::zeros(&[dim]),
+        ])
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        let (heads, dim, causal) = unpack(node)?;
+        let x = inputs[0];
+        let (ctx, _) = attention_core(x, params, heads, dim, causal);
+        let s = x.shape();
+        let (b, sl) = (s[0], s[1]);
+        // out = ctx·Wo + bo
+        let mut out = matmul(&ctx, params[2].f(), b * sl, dim, dim);
+        add_row_bias(&mut out, dim, params[3].f());
+        Ok(Tensor::from_vec(s, out))
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let (heads, dim, causal) = unpack(node)?;
+        attention_bwd(inputs[0], params, dy, heads, dim, causal)
+    }
+}
+
+/// Shared fwd computation: returns (concat context [B*S, D], per-(b,h)
+/// softmax probabilities P [S,S] flattened) for reuse in backward.
+fn attention_core(
+    x: &Tensor,
+    params: &[Tensor],
+    heads: usize,
+    dim: usize,
+    causal: bool,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    use crate::tensor::softmax_lastaxis;
+    let s = x.shape();
+    let (b, sl) = (s[0], s[1]);
+    let hd = dim / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    // qkv[B*S, 3D]
+    let mut qkv = matmul(x.f(), params[0].f(), b * sl, dim, 3 * dim);
+    add_row_bias(&mut qkv, 3 * dim, params[1].f());
+    let mut ctx = vec![0.0f32; b * sl * dim];
+    let mut probs = Vec::with_capacity(b * heads);
+    for bi in 0..b {
+        for h in 0..heads {
+            // Q,K,V [S,hd] slices of qkv rows.
+            let q_off = h * hd;
+            let k_off = dim + h * hd;
+            let v_off = 2 * dim + h * hd;
+            let mut scores = vec![f32::NEG_INFINITY; sl * sl];
+            for i in 0..sl {
+                let qrow = &qkv[(bi * sl + i) * 3 * dim + q_off..][..hd];
+                let jmax = if causal { i + 1 } else { sl };
+                for j in 0..jmax {
+                    let krow = &qkv[(bi * sl + j) * 3 * dim + k_off..][..hd];
+                    let mut dot = 0.0;
+                    for d in 0..hd {
+                        dot += qrow[d] * krow[d];
+                    }
+                    scores[i * sl + j] = dot * scale;
+                }
+            }
+            softmax_lastaxis(&mut scores, sl);
+            // ctx_i = Σ_j P_ij · V_j
+            for i in 0..sl {
+                for j in 0..sl {
+                    let p = scores[i * sl + j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &qkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
+                    let crow = &mut ctx[(bi * sl + i) * dim + h * hd..][..hd];
+                    for d in 0..hd {
+                        crow[d] += p * vrow[d];
+                    }
+                }
+            }
+            probs.push(scores);
+        }
+    }
+    (ctx, probs)
+}
+
+fn attention_bwd(
+    x: &Tensor,
+    params: &[Tensor],
+    dy: &Tensor,
+    heads: usize,
+    dim: usize,
+    causal: bool,
+) -> Result<BackwardOut> {
+    let s = x.shape();
+    let (b, sl) = (s[0], s[1]);
+    let hd = dim / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let rows = b * sl;
+
+    // Recompute forward intermediates.
+    let mut qkv = matmul(x.f(), params[0].f(), rows, dim, 3 * dim);
+    add_row_bias(&mut qkv, 3 * dim, params[1].f());
+    let (ctx, probs) = attention_core(x, params, heads, dim, causal);
+
+    // out = ctx·Wo + bo  ⇒  dctx = dy·Woᵀ ; dWo = ctxᵀ·dy ; dbo = Σ dy.
+    let dctx = matmul_bt(dy.f(), params[2].f(), rows, dim, dim);
+    let dwo = matmul_at(&ctx, dy.f(), dim, rows, dim);
+    let dbo = sum_rows(dy.f(), dim);
+
+    // Per (batch, head): dP, dscores, dQ, dK, dV.
+    let mut dqkv = vec![0.0f32; rows * 3 * dim];
+    for bi in 0..b {
+        for h in 0..heads {
+            let p = &probs[bi * heads + h]; // [S,S]
+            let q_off = h * hd;
+            let k_off = dim + h * hd;
+            let v_off = 2 * dim + h * hd;
+            // dP_ij = dctx_i · V_j ; dV_j = Σ_i P_ij dctx_i
+            let mut dp = vec![0.0f32; sl * sl];
+            for i in 0..sl {
+                let dci = &dctx[(bi * sl + i) * dim + h * hd..][..hd];
+                for j in 0..sl {
+                    let vrow = &qkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
+                    let mut dot = 0.0;
+                    for d in 0..hd {
+                        dot += dci[d] * vrow[d];
+                    }
+                    dp[i * sl + j] = dot;
+                    // dV
+                    let pv = p[i * sl + j];
+                    if pv != 0.0 {
+                        let dvrow = &mut dqkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
+                        for d in 0..hd {
+                            dvrow[d] += pv * dci[d];
+                        }
+                    }
+                }
+            }
+            // softmax backward per row: ds = P ∘ (dP − Σ_j dP·P)
+            let mut ds = vec![0.0f32; sl * sl];
+            for i in 0..sl {
+                let o = i * sl;
+                let dot: f32 = (0..sl).map(|j| dp[o + j] * p[o + j]).sum();
+                for j in 0..sl {
+                    ds[o + j] = p[o + j] * (dp[o + j] - dot);
+                }
+            }
+            // dQ_i = scale Σ_j ds_ij K_j ; dK_j = scale Σ_i ds_ij Q_i
+            for i in 0..sl {
+                for j in 0..sl {
+                    let g = ds[i * sl + j] * scale;
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let (qi, kj) = ((bi * sl + i) * 3 * dim, (bi * sl + j) * 3 * dim);
+                    for d in 0..hd {
+                        dqkv[qi + q_off + d] += g * qkv[kj + k_off + d];
+                        dqkv[kj + k_off + d] += g * qkv[qi + q_off + d];
+                    }
+                }
+            }
+        }
+    }
+
+    // qkv = x·Wqkv + b ⇒ dx = dqkv·Wqkvᵀ ; dWqkv = xᵀ·dqkv ; dbqkv = Σ dqkv.
+    let dx = matmul_bt(&dqkv, params[0].f(), rows, 3 * dim, dim);
+    let dwqkv = matmul_at(x.f(), &dqkv, dim, rows, 3 * dim);
+    let dbqkv = sum_rows(&dqkv, 3 * dim);
+
+    Ok(BackwardOut {
+        input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
+        param_grads: vec![
+            Tensor::from_vec(&[dim, 3 * dim], dwqkv),
+            Tensor::from_vec(&[3 * dim], dbqkv),
+            Tensor::from_vec(&[dim, dim], dwo),
+            Tensor::from_vec(&[dim], dbo),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DType, Graph, Shape};
+    use crate::exec::kernels::{kernel_for, testutil::fd_check};
+
+    #[test]
+    fn grad_attention() {
+        fd_check(
+            OpKind::Attention { heads: 2, dim: 8, causal: false },
+            &[(&[1, 4, 8], DType::F32)],
+            4e-2,
+        );
+    }
+
+    #[test]
+    fn grad_attention_causal() {
+        fd_check(
+            OpKind::Attention { heads: 2, dim: 8, causal: true },
+            &[(&[1, 4, 8], DType::F32)],
+            4e-2,
+        );
+    }
+
+    #[test]
+    fn causal_attention_masks_future() {
+        // Changing a future token must not change earlier outputs.
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[1, 4, 8]), DType::F32);
+        let id =
+            g.op("attn", OpKind::Attention { heads: 2, dim: 8, causal: true }, &[x]).unwrap();
+        let node = g.node(id).clone();
+        let kernel = kernel_for(&node.kind);
+        let mut rng = Rng::new(11);
+        let params = kernel.init_params(&node, &mut rng).unwrap();
+        let a = Tensor::randn(&[1, 4, 8], 1.0, &mut rng);
+        let mut b = a.clone();
+        // Perturb the last token only.
+        for d in 0..8 {
+            b.f_mut()[3 * 8 + d] += 1.0;
+        }
+        let ya = kernel.forward(&node, &[&a], &params).unwrap();
+        let yb = kernel.forward(&node, &[&b], &params).unwrap();
+        for t in 0..3 {
+            for d in 0..8 {
+                assert!(
+                    (ya.f()[t * 8 + d] - yb.f()[t * 8 + d]).abs() < 1e-6,
+                    "leak at token {t}"
+                );
+            }
+        }
+        // And the last token's output must differ.
+        let diff: f32 = (0..8).map(|d| (ya.f()[3 * 8 + d] - yb.f()[3 * 8 + d]).abs()).sum();
+        assert!(diff > 1e-3);
+    }
+}

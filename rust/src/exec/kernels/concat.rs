@@ -1,0 +1,90 @@
+//! Concatenation kernel along an arbitrary axis.
+
+use anyhow::{bail, Result};
+
+use super::OpKernel;
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::Tensor;
+
+pub struct ConcatKernel;
+
+fn unpack(node: &Node) -> Result<usize> {
+    match node.kind {
+        OpKind::Concat { axis } => Ok(axis),
+        _ => bail!("ConcatKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for ConcatKernel {
+    fn name(&self) -> &'static str {
+        "concat"
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        let axis = unpack(node)?;
+        let base = inputs[0].shape();
+        let outer: usize = base[..axis].iter().product();
+        let inner: usize = base[axis + 1..].iter().product();
+        let mut axis_total = 0;
+        for t in inputs {
+            axis_total += t.shape()[axis];
+        }
+        let mut shape = base.to_vec();
+        shape[axis] = axis_total;
+        let mut out = vec![0.0f32; outer * axis_total * inner];
+        for o in 0..outer {
+            let mut dst_off = o * axis_total * inner;
+            for t in inputs {
+                let a = t.shape()[axis];
+                let src = &t.f()[o * a * inner..(o + 1) * a * inner];
+                out[dst_off..dst_off + a * inner].copy_from_slice(src);
+                dst_off += a * inner;
+            }
+        }
+        Ok(Tensor::from_vec(&shape, out))
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let axis = unpack(node)?;
+        let base = inputs[0].shape();
+        let outer: usize = base[..axis].iter().product();
+        let inner: usize = base[axis + 1..].iter().product();
+        let axis_total: usize = inputs.iter().map(|t| t.shape()[axis]).sum();
+        let dyf = dy.f();
+        let mut grads: Vec<Option<Tensor>> = Vec::with_capacity(inputs.len());
+        let mut axis_off = 0;
+        for t in inputs {
+            let a = t.shape()[axis];
+            let mut g = vec![0.0f32; t.numel()];
+            for o in 0..outer {
+                let src = &dyf[(o * axis_total + axis_off) * inner..][..a * inner];
+                g[o * a * inner..(o + 1) * a * inner].copy_from_slice(src);
+            }
+            grads.push(Some(Tensor::from_vec(t.shape(), g)));
+            axis_off += a;
+        }
+        Ok(BackwardOut { input_grads: grads, param_grads: vec![] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dag::{DType, OpKind};
+    use crate::exec::kernels::testutil::fd_check;
+
+    #[test]
+    fn grad_concat() {
+        fd_check(
+            OpKind::Concat { axis: 1 },
+            &[(&[2, 2, 3], DType::F32), (&[2, 4, 3], DType::F32)],
+            1e-2,
+        );
+    }
+}

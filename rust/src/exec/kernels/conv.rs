@@ -1,0 +1,263 @@
+//! Spatial kernels: 2-D convolution and max pooling over NCHW.
+
+use anyhow::{bail, Result};
+
+use super::OpKernel;
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct Conv2dKernel;
+
+#[allow(clippy::type_complexity)]
+fn unpack_conv(node: &Node) -> Result<(usize, usize, usize, usize, usize)> {
+    match node.kind {
+        OpKind::Conv2d { in_ch, out_ch, kernel, stride, padding } => {
+            Ok((in_ch, out_ch, kernel, stride, padding))
+        }
+        _ => bail!("Conv2dKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for Conv2dKernel {
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn init_params(&self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        let (in_ch, out_ch, k, _, _) = unpack_conv(node)?;
+        let std = (2.0 / (in_ch as f32 * (k * k) as f32)).sqrt();
+        Ok(vec![
+            Tensor::randn(&[out_ch, in_ch, k, k], std, rng),
+            Tensor::zeros(&[out_ch]),
+        ])
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        let (in_ch, out_ch, k, stride, pad) = unpack_conv(node)?;
+        conv2d_fwd(inputs[0], &params[0], &params[1], in_ch, out_ch, k, stride, pad)
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let (in_ch, out_ch, k, stride, pad) = unpack_conv(node)?;
+        conv2d_bwd(inputs[0], &params[0], dy, in_ch, out_ch, k, stride, pad)
+    }
+}
+
+pub struct MaxPool2dKernel;
+
+impl OpKernel for MaxPool2dKernel {
+    fn name(&self) -> &'static str {
+        "maxpool2d"
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        let OpKind::MaxPool2d { kernel, stride } = node.kind else {
+            bail!("MaxPool2dKernel dispatched on {}", node.kind.name());
+        };
+        Ok(maxpool_fwd(inputs[0], kernel, stride).0)
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let OpKind::MaxPool2d { kernel, stride } = node.kind else {
+            bail!("MaxPool2dKernel dispatched on {}", node.kind.name());
+        };
+        let (_, argmax) = maxpool_fwd(inputs[0], kernel, stride);
+        let mut dx = Tensor::zeros(inputs[0].shape());
+        let dxf = dx.f_mut();
+        for (o, &src) in argmax.iter().enumerate() {
+            dxf[src] += dy.f()[o];
+        }
+        Ok(BackwardOut { input_grads: vec![Some(dx)], param_grads: vec![] })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_fwd(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<Tensor> {
+    let s = x.shape();
+    let (n, h, wd) = (s[0], s[2], s[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (wd + 2 * pad - k) / stride + 1;
+    let xf = x.f();
+    let wf = w.f();
+    let bf = b.f();
+    let mut out = vec![0.0f32; n * out_ch * oh * ow];
+    for ni in 0..n {
+        for oc in 0..out_ch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bf[oc];
+                    for ic in 0..in_ch {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = oy * stride + ky;
+                                let ix = ox * stride + kx;
+                                if iy < pad || ix < pad {
+                                    continue;
+                                }
+                                let (iy, ix) = (iy - pad, ix - pad);
+                                if iy >= h || ix >= wd {
+                                    continue;
+                                }
+                                acc += xf[((ni * in_ch + ic) * h + iy) * wd + ix]
+                                    * wf[((oc * in_ch + ic) * k + ky) * k + kx];
+                            }
+                        }
+                    }
+                    out[((ni * out_ch + oc) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Ok(Tensor::from_vec(&[n, out_ch, oh, ow], out))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_bwd(
+    x: &Tensor,
+    w: &Tensor,
+    dy: &Tensor,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<BackwardOut> {
+    let s = x.shape();
+    let (n, h, wd) = (s[0], s[2], s[3]);
+    let os = dy.shape();
+    let (oh, ow) = (os[2], os[3]);
+    let xf = x.f();
+    let wf = w.f();
+    let dyf = dy.f();
+    let mut dx = vec![0.0f32; xf.len()];
+    let mut dw = vec![0.0f32; wf.len()];
+    let mut db = vec![0.0f32; out_ch];
+    for ni in 0..n {
+        for oc in 0..out_ch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let g = dyf[((ni * out_ch + oc) * oh + oy) * ow + ox];
+                    db[oc] += g;
+                    for ic in 0..in_ch {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = oy * stride + ky;
+                                let ix = ox * stride + kx;
+                                if iy < pad || ix < pad {
+                                    continue;
+                                }
+                                let (iy, ix) = (iy - pad, ix - pad);
+                                if iy >= h || ix >= wd {
+                                    continue;
+                                }
+                                let xi = ((ni * in_ch + ic) * h + iy) * wd + ix;
+                                let wi = ((oc * in_ch + ic) * k + ky) * k + kx;
+                                dx[xi] += g * wf[wi];
+                                dw[wi] += g * xf[xi];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(BackwardOut {
+        input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
+        param_grads: vec![
+            Tensor::from_vec(w.shape(), dw),
+            Tensor::from_vec(&[out_ch], db),
+        ],
+    })
+}
+
+/// Returns (output, flat argmax indices into the input) for pooling.
+fn maxpool_fwd(x: &Tensor, k: usize, stride: usize) -> (Tensor, Vec<usize>) {
+    let s = x.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let xf = x.f();
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    let mut arg = vec![0usize; out.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = 0;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let idx = ((ni * c + ci) * h + oy * stride + ky) * w
+                                + ox * stride
+                                + kx;
+                            if xf[idx] > best {
+                                best = xf[idx];
+                                bi = idx;
+                            }
+                        }
+                    }
+                    let o = ((ni * c + ci) * oh + oy) * ow + ox;
+                    out[o] = best;
+                    arg[o] = bi;
+                }
+            }
+        }
+    }
+    (Tensor::from_vec(&[n, c, oh, ow], out), arg)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dag::{DType, OpKind};
+    use crate::exec::kernels::testutil::fd_check;
+
+    #[test]
+    fn grad_conv2d() {
+        fd_check(
+            OpKind::Conv2d { in_ch: 2, out_ch: 3, kernel: 3, stride: 1, padding: 1 },
+            &[(&[1, 2, 5, 5], DType::F32)],
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_conv2d_strided_nopad() {
+        fd_check(
+            OpKind::Conv2d { in_ch: 1, out_ch: 2, kernel: 2, stride: 2, padding: 0 },
+            &[(&[1, 1, 6, 6], DType::F32)],
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_maxpool() {
+        fd_check(
+            OpKind::MaxPool2d { kernel: 2, stride: 2 },
+            &[(&[1, 2, 4, 4], DType::F32)],
+            2e-2,
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Elementwise kernels: Add, Multiply, Relu, Gelu.
+
+use anyhow::Result;
+
+use super::OpKernel;
+use crate::dag::Node;
+use crate::exec::BackwardOut;
+use crate::tensor::{gelu, gelu_grad, Tensor};
+
+pub struct AddKernel;
+
+impl OpKernel for AddKernel {
+    fn name(&self) -> &'static str {
+        "add"
+    }
+
+    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        Ok(inputs[0].zip(inputs[1], |a, b| a + b))
+    }
+
+    fn vjp(
+        &self,
+        _node: &Node,
+        _inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        Ok(BackwardOut {
+            input_grads: vec![Some(dy.clone()), Some(dy.clone())],
+            param_grads: vec![],
+        })
+    }
+}
+
+pub struct MultiplyKernel;
+
+impl OpKernel for MultiplyKernel {
+    fn name(&self) -> &'static str {
+        "multiply"
+    }
+
+    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        Ok(inputs[0].zip(inputs[1], |a, b| a * b))
+    }
+
+    fn vjp(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        Ok(BackwardOut {
+            input_grads: vec![
+                Some(dy.zip(inputs[1], |g, b| g * b)),
+                Some(dy.zip(inputs[0], |g, a| g * a)),
+            ],
+            param_grads: vec![],
+        })
+    }
+}
+
+pub struct ReluKernel;
+
+impl OpKernel for ReluKernel {
+    fn name(&self) -> &'static str {
+        "relu"
+    }
+
+    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        Ok(inputs[0].map(|x| x.max(0.0)))
+    }
+
+    fn vjp(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        Ok(BackwardOut {
+            input_grads: vec![Some(dy.zip(inputs[0], |g, x| if x > 0.0 { g } else { 0.0 }))],
+            param_grads: vec![],
+        })
+    }
+}
+
+pub struct GeluKernel;
+
+impl OpKernel for GeluKernel {
+    fn name(&self) -> &'static str {
+        "gelu"
+    }
+
+    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        Ok(inputs[0].map(gelu))
+    }
+
+    fn vjp(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        Ok(BackwardOut {
+            input_grads: vec![Some(dy.zip(inputs[0], |g, x| g * gelu_grad(x)))],
+            param_grads: vec![],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dag::{DType, OpKind};
+    use crate::exec::kernels::testutil::fd_check;
+
+    #[test]
+    fn grad_elementwise() {
+        fd_check(OpKind::Add, &[(&[2, 3], DType::F32), (&[2, 3], DType::F32)], 1e-2);
+        fd_check(OpKind::Multiply, &[(&[2, 3], DType::F32), (&[2, 3], DType::F32)], 1e-2);
+        fd_check(OpKind::Gelu, &[(&[2, 5], DType::F32)], 1e-2);
+    }
+}

@@ -1,0 +1,106 @@
+//! Token-embedding lookup kernel (table `[vocab, dim]`).
+
+use anyhow::{bail, Result};
+
+use super::OpKernel;
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct EmbeddingKernel;
+
+fn unpack(node: &Node) -> Result<(usize, usize)> {
+    match node.kind {
+        OpKind::Embedding { vocab, dim } => Ok((vocab, dim)),
+        _ => bail!("EmbeddingKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for EmbeddingKernel {
+    fn name(&self) -> &'static str {
+        "embedding"
+    }
+
+    fn init_params(&self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        let (vocab, dim) = unpack(node)?;
+        Ok(vec![Tensor::randn(&[vocab, dim], 0.02, rng)])
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        let (vocab, dim) = unpack(node)?;
+        let ids = inputs[0];
+        let tf = params[0].f();
+        let mut out = Vec::with_capacity(ids.numel() * dim);
+        for &id in ids.i() {
+            let id = id as usize;
+            if id >= vocab {
+                bail!("token id {id} out of vocab {vocab}");
+            }
+            out.extend_from_slice(&tf[id * dim..(id + 1) * dim]);
+        }
+        let mut shape = ids.shape().to_vec();
+        shape.push(dim);
+        Ok(Tensor::from_vec(&shape, out))
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let (vocab, dim) = unpack(node)?;
+        let mut dtable = Tensor::zeros(&[vocab, dim]);
+        let ids = inputs[0].i();
+        let dyf = dy.f();
+        let dt = dtable.f_mut();
+        for (pos, &id) in ids.iter().enumerate() {
+            let row = id as usize * dim;
+            for d in 0..dim {
+                dt[row + d] += dyf[pos * dim + d];
+            }
+        }
+        Ok(BackwardOut { input_grads: vec![None], param_grads: vec![dtable] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DType, Graph, Shape};
+    use crate::exec::kernels::kernel_for;
+
+    #[test]
+    fn grad_embedding_scatter() {
+        let mut g = Graph::new();
+        let tok = g.placeholder("tok", Shape::of(&[3]), DType::I32);
+        let id = g.op("emb", OpKind::Embedding { vocab: 5, dim: 2 }, &[tok]).unwrap();
+        let node = g.node(id).clone();
+        let kernel = kernel_for(&node.kind);
+        let mut rng = Rng::new(5);
+        let params = kernel.init_params(&node, &mut rng).unwrap();
+        let ids = Tensor::from_ivec(&[3], vec![1, 3, 1]);
+        let dy = Tensor::from_vec(&[3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let bwd = kernel.vjp(&node, &[&ids], &params, &dy).unwrap();
+        let dt = bwd.param_grads[0].f();
+        // row 1 accumulates positions 0 and 2; row 3 gets position 1.
+        assert_eq!(&dt[2..4], &[1.0 + 5.0, 2.0 + 6.0]);
+        assert_eq!(&dt[6..8], &[3.0, 4.0]);
+        assert_eq!(&dt[0..2], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_out_of_vocab() {
+        let mut g = Graph::new();
+        let tok = g.placeholder("tok", Shape::of(&[1]), DType::I32);
+        let id = g.op("emb", OpKind::Embedding { vocab: 3, dim: 2 }, &[tok]).unwrap();
+        let node = g.node(id).clone();
+        let kernel = kernel_for(&node.kind);
+        let mut rng = Rng::new(5);
+        let params = kernel.init_params(&node, &mut rng).unwrap();
+        let ids = Tensor::from_ivec(&[1], vec![9]);
+        assert!(kernel.forward(&node, &[&ids], &params).is_err());
+    }
+}

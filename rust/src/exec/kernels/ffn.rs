@@ -1,0 +1,95 @@
+//! Transformer feed-forward kernel `y = W2·gelu(x·W1 + b1) + b2`.
+//! params = [W1, b1, W2, b2].
+
+use anyhow::{bail, Result};
+
+use super::{add_row_bias, sum_rows, OpKernel};
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::{gelu, gelu_grad, matmul, matmul_at, matmul_bt, Tensor};
+use crate::util::Rng;
+
+pub struct FeedForwardKernel;
+
+fn unpack(node: &Node) -> Result<(usize, usize)> {
+    match node.kind {
+        OpKind::FeedForward { dim, hidden } => Ok((dim, hidden)),
+        _ => bail!("FeedForwardKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for FeedForwardKernel {
+    fn name(&self) -> &'static str {
+        "feedforward"
+    }
+
+    fn init_params(&self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        let (dim, hidden) = unpack(node)?;
+        let s1 = 1.0 / (dim as f32).sqrt();
+        let s2 = 1.0 / (hidden as f32).sqrt();
+        Ok(vec![
+            Tensor::randn(&[dim, hidden], s1, rng),
+            Tensor::zeros(&[hidden]),
+            Tensor::randn(&[hidden, dim], s2, rng),
+            Tensor::zeros(&[dim]),
+        ])
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        let (dim, hidden) = unpack(node)?;
+        let x = inputs[0];
+        let rows = x.numel() / dim;
+        let mut h = matmul(x.f(), params[0].f(), rows, dim, hidden);
+        add_row_bias(&mut h, hidden, params[1].f());
+        let a: Vec<f32> = h.iter().map(|&v| gelu(v)).collect();
+        let mut y = matmul(&a, params[2].f(), rows, hidden, dim);
+        add_row_bias(&mut y, dim, params[3].f());
+        Ok(Tensor::from_vec(x.shape(), y))
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let (dim, hidden) = unpack(node)?;
+        let x = inputs[0];
+        let rows = x.numel() / dim;
+        // Recompute h and a.
+        let mut h = matmul(x.f(), params[0].f(), rows, dim, hidden);
+        add_row_bias(&mut h, hidden, params[1].f());
+        let a: Vec<f32> = h.iter().map(|&v| gelu(v)).collect();
+        // y = a·W2 + b2
+        let da = matmul_bt(dy.f(), params[2].f(), rows, dim, hidden);
+        let dw2 = matmul_at(&a, dy.f(), hidden, rows, dim);
+        let db2 = sum_rows(dy.f(), dim);
+        // a = gelu(h)
+        let dh: Vec<f32> = da.iter().zip(&h).map(|(&g, &hv)| g * gelu_grad(hv)).collect();
+        // h = x·W1 + b1
+        let dx = matmul_bt(&dh, params[0].f(), rows, hidden, dim);
+        let dw1 = matmul_at(x.f(), &dh, dim, rows, hidden);
+        let db1 = sum_rows(&dh, hidden);
+        Ok(BackwardOut {
+            input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
+            param_grads: vec![
+                Tensor::from_vec(&[dim, hidden], dw1),
+                Tensor::from_vec(&[hidden], db1),
+                Tensor::from_vec(&[hidden, dim], dw2),
+                Tensor::from_vec(&[dim], db2),
+            ],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dag::{DType, OpKind};
+    use crate::exec::kernels::testutil::fd_check;
+
+    #[test]
+    fn grad_ffn() {
+        fd_check(OpKind::FeedForward { dim: 6, hidden: 10 }, &[(&[3, 6], DType::F32)], 3e-2);
+    }
+}

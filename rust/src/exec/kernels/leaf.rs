@@ -1,0 +1,61 @@
+//! Leaf kernels: placeholders (fed, never executed) and variables
+//! (directly-optimized tensors, paper Table 2).
+
+use anyhow::{bail, Result};
+
+use super::OpKernel;
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct PlaceholderKernel;
+
+impl OpKernel for PlaceholderKernel {
+    fn name(&self) -> &'static str {
+        "placeholder"
+    }
+
+    fn forward(&self, _node: &Node, _inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        bail!("placeholders are fed, not executed")
+    }
+
+    fn vjp(
+        &self,
+        _node: &Node,
+        _inputs: &[&Tensor],
+        _params: &[Tensor],
+        _dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        bail!("placeholders have no backward")
+    }
+}
+
+pub struct VariableKernel;
+
+impl OpKernel for VariableKernel {
+    fn name(&self) -> &'static str {
+        "variable"
+    }
+
+    fn init_params(&self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        if !matches!(node.kind, OpKind::Variable) {
+            bail!("VariableKernel dispatched on {}", node.kind.name());
+        }
+        Ok(vec![Tensor::randn(node.out_shape.dims(), 0.02, rng)])
+    }
+
+    fn forward(&self, _node: &Node, _inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        Ok(params[0].clone())
+    }
+
+    fn vjp(
+        &self,
+        _node: &Node,
+        _inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        Ok(BackwardOut { input_grads: vec![], param_grads: vec![dy.clone()] })
+    }
+}

@@ -1,0 +1,97 @@
+//! Affine layer `y = xW + b` over the last axis.
+
+use anyhow::{bail, Result};
+
+use super::{add_row_bias, sum_rows, OpKernel};
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+use crate::util::Rng;
+
+pub struct LinearKernel;
+
+fn unpack(node: &Node) -> Result<(usize, usize, bool)> {
+    match node.kind {
+        OpKind::Linear { in_features, out_features, bias } => {
+            Ok((in_features, out_features, bias))
+        }
+        _ => bail!("LinearKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for LinearKernel {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn init_params(&self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
+        let (in_f, out_f, bias) = unpack(node)?;
+        let std = 1.0 / (in_f as f32).sqrt();
+        let mut p = vec![Tensor::randn(&[in_f, out_f], std, rng)];
+        if bias {
+            p.push(Tensor::zeros(&[out_f]));
+        }
+        Ok(p)
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        let (in_f, out_f, bias) = unpack(node)?;
+        let x = inputs[0];
+        let m = x.numel() / in_f;
+        let mut y = matmul(x.f(), params[0].f(), m, in_f, out_f);
+        if bias {
+            add_row_bias(&mut y, out_f, params[1].f());
+        }
+        let mut shape = x.shape().to_vec();
+        *shape.last_mut().unwrap() = out_f;
+        Ok(Tensor::from_vec(&shape, y))
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let (in_f, out_f, bias) = unpack(node)?;
+        let x = inputs[0];
+        let m = x.numel() / in_f;
+        // dx[m,in] = dy[m,out] · Wᵀ[out,in]; with W[in,out] use matmul_bt.
+        let dx = matmul_bt(dy.f(), params[0].f(), m, out_f, in_f);
+        // dW[in,out] = xᵀ[in,m] · dy[m,out]
+        let dw = matmul_at(x.f(), dy.f(), in_f, m, out_f);
+        let mut grads = vec![Tensor::from_vec(&[in_f, out_f], dw)];
+        if bias {
+            grads.push(Tensor::from_vec(&[out_f], sum_rows(dy.f(), out_f)));
+        }
+        Ok(BackwardOut {
+            input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
+            param_grads: grads,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dag::{DType, OpKind};
+    use crate::exec::kernels::testutil::fd_check;
+
+    #[test]
+    fn grad_linear() {
+        fd_check(
+            OpKind::Linear { in_features: 5, out_features: 4, bias: true },
+            &[(&[3, 5], DType::F32)],
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_linear_no_bias() {
+        fd_check(
+            OpKind::Linear { in_features: 4, out_features: 3, bias: false },
+            &[(&[2, 4], DType::F32)],
+            2e-2,
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Normalization kernels: layer norm (with affine) and softmax.
+
+use anyhow::{bail, Result};
+
+use super::OpKernel;
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::{softmax_lastaxis, Tensor};
+use crate::util::Rng;
+
+pub struct LayerNormKernel;
+
+fn unpack_ln(node: &Node) -> Result<usize> {
+    match node.kind {
+        OpKind::LayerNorm { dim } => Ok(dim),
+        _ => bail!("LayerNormKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for LayerNormKernel {
+    fn name(&self) -> &'static str {
+        "layernorm"
+    }
+
+    fn init_params(&self, node: &Node, _rng: &mut Rng) -> Result<Vec<Tensor>> {
+        let dim = unpack_ln(node)?;
+        Ok(vec![Tensor::from_vec(&[dim], vec![1.0; dim]), Tensor::zeros(&[dim])])
+    }
+
+    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+        let dim = unpack_ln(node)?;
+        Ok(layernorm_fwd(inputs[0], &params[0], &params[1], dim).0)
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let dim = unpack_ln(node)?;
+        layernorm_bwd(inputs[0], &params[0], dy, dim)
+    }
+}
+
+pub struct SoftmaxKernel;
+
+impl OpKernel for SoftmaxKernel {
+    fn name(&self) -> &'static str {
+        "softmax"
+    }
+
+    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        let mut out = inputs[0].clone();
+        let row = *out.shape().last().unwrap();
+        softmax_lastaxis(out.f_mut(), row);
+        Ok(out)
+    }
+
+    fn vjp(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        let mut y = inputs[0].clone();
+        let row = *y.shape().last().unwrap();
+        softmax_lastaxis(y.f_mut(), row);
+        let yf = y.f();
+        let gf = dy.f();
+        let mut dx = vec![0.0f32; yf.len()];
+        for r in 0..yf.len() / row {
+            let o = r * row;
+            let dot: f32 = (0..row).map(|j| gf[o + j] * yf[o + j]).sum();
+            for j in 0..row {
+                dx[o + j] = yf[o + j] * (gf[o + j] - dot);
+            }
+        }
+        Ok(BackwardOut {
+            input_grads: vec![Some(Tensor::from_vec(inputs[0].shape(), dx))],
+            param_grads: vec![],
+        })
+    }
+}
+
+/// Returns (output, per-row (mean, inv_std)) — backward recomputes them.
+fn layernorm_fwd(
+    x: &Tensor,
+    gamma: &Tensor,
+    beta: &Tensor,
+    dim: usize,
+) -> (Tensor, Vec<(f32, f32)>) {
+    const EPS: f32 = 1e-5;
+    let xf = x.f();
+    let gf = gamma.f();
+    let bf = beta.f();
+    let rows = xf.len() / dim;
+    let mut out = vec![0.0f32; xf.len()];
+    let mut stats = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let seg = &xf[r * dim..(r + 1) * dim];
+        let mean = seg.iter().sum::<f32>() / dim as f32;
+        let var = seg.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / dim as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for j in 0..dim {
+            out[r * dim + j] = gf[j] * (seg[j] - mean) * inv + bf[j];
+        }
+        stats.push((mean, inv));
+    }
+    (Tensor::from_vec(x.shape(), out), stats)
+}
+
+fn layernorm_bwd(x: &Tensor, gamma: &Tensor, dy: &Tensor, dim: usize) -> Result<BackwardOut> {
+    let (_, stats) = layernorm_fwd(x, gamma, &Tensor::zeros(&[dim]), dim);
+    let xf = x.f();
+    let gf = gamma.f();
+    let dyf = dy.f();
+    let rows = xf.len() / dim;
+    let mut dx = vec![0.0f32; xf.len()];
+    let mut dgamma = vec![0.0f32; dim];
+    let mut dbeta = vec![0.0f32; dim];
+    for r in 0..rows {
+        let (mean, inv) = stats[r];
+        let o = r * dim;
+        // xhat and dyhat = dy·γ
+        let mut sum_dyh = 0.0f32;
+        let mut sum_dyh_xh = 0.0f32;
+        for j in 0..dim {
+            let xh = (xf[o + j] - mean) * inv;
+            let dyh = dyf[o + j] * gf[j];
+            sum_dyh += dyh;
+            sum_dyh_xh += dyh * xh;
+            dgamma[j] += dyf[o + j] * xh;
+            dbeta[j] += dyf[o + j];
+        }
+        let nd = dim as f32;
+        for j in 0..dim {
+            let xh = (xf[o + j] - mean) * inv;
+            let dyh = dyf[o + j] * gf[j];
+            dx[o + j] = inv * (dyh - sum_dyh / nd - xh * sum_dyh_xh / nd);
+        }
+    }
+    Ok(BackwardOut {
+        input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
+        param_grads: vec![Tensor::from_vec(&[dim], dgamma), Tensor::from_vec(&[dim], dbeta)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dag::{DType, OpKind};
+    use crate::exec::kernels::testutil::fd_check;
+
+    #[test]
+    fn grad_layernorm() {
+        fd_check(OpKind::LayerNorm { dim: 6 }, &[(&[4, 6], DType::F32)], 3e-2);
+    }
+
+    #[test]
+    fn grad_softmax() {
+        fd_check(OpKind::Softmax, &[(&[3, 4], DType::F32)], 2e-2);
+    }
+}

@@ -1,0 +1,62 @@
+//! StageCall "kernel": a deliberate dead end on the host planes.
+//!
+//! StageCall nodes reference compiled pipeline-stage artifacts and can only
+//! be executed by an engine that understands the artifact manifest (the
+//! XlaEngine). Any host-side registry lookup lands here and fails with a
+//! single shared message — previously this error string was copy-pasted
+//! across the forward and backward match arms of the reference engine.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::OpKernel;
+use crate::dag::{Node, OpKind};
+use crate::exec::BackwardOut;
+use crate::tensor::Tensor;
+
+/// The one place the "host engine cannot run a StageCall" error is built.
+pub fn stagecall_unsupported(engine: &str, stage: &str) -> anyhow::Error {
+    anyhow!("{engine} cannot execute StageCall '{stage}' (use XlaEngine)")
+}
+
+pub struct StageCallKernel;
+
+fn stage_name(node: &Node) -> Result<&str> {
+    match &node.kind {
+        OpKind::StageCall { stage, .. } => Ok(stage),
+        _ => bail!("StageCallKernel dispatched on {}", node.kind.name()),
+    }
+}
+
+impl OpKernel for StageCallKernel {
+    fn name(&self) -> &'static str {
+        "stage_call"
+    }
+
+    fn forward(&self, node: &Node, _inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+        Err(stagecall_unsupported("RefEngine", stage_name(node)?))
+    }
+
+    fn vjp(
+        &self,
+        node: &Node,
+        _inputs: &[&Tensor],
+        _params: &[Tensor],
+        _dy: &Tensor,
+    ) -> Result<BackwardOut> {
+        Err(stagecall_unsupported("RefEngine", stage_name(node)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_names_engine_stage_and_remedy() {
+        let err = stagecall_unsupported("RefEngine", "blocks_0_1");
+        assert_eq!(
+            err.to_string(),
+            "RefEngine cannot execute StageCall 'blocks_0_1' (use XlaEngine)"
+        );
+    }
+}

@@ -7,18 +7,23 @@
 //!
 //! [`Engine`] is that general interface: a backend that can initialize
 //! parameters, run one operator's forward, and run its backward
-//! (vector-Jacobian product). Two engines ship in-tree:
+//! (vector-Jacobian product). The per-operator numerics live in the
+//! [`kernels`] registry — one [`kernels::OpKernel`] per op family — and
+//! both engines dispatch through it. Two engines ship in-tree:
 //!
 //! * [`RefEngine`] — pure-rust f32 interpreter of every IR operator; used by
 //!   the simulator, the quickstart and as the numerics oracle;
 //! * [`XlaEngine`](crate::exec::xla_engine::XlaEngine) — executes
 //!   AOT-compiled HLO artifacts through PJRT (the production hot path for
-//!   `StageCall` graphs).
+//!   `StageCall` graphs), falling back to the host kernels for any
+//!   non-`StageCall` op.
 
+pub mod kernels;
 pub mod optim;
 pub mod ref_engine;
 pub mod xla_engine;
 
+pub use kernels::{kernel_for, OpKernel};
 pub use optim::{Adam, Optimizer, Sgd};
 pub use ref_engine::RefEngine;
 

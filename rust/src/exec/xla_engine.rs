@@ -21,7 +21,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::dag::{Node, OpKind};
-use crate::exec::{BackwardOut, Engine};
+use crate::exec::{kernels, BackwardOut, Engine};
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -320,14 +320,16 @@ impl Engine for XlaEngine {
     fn init_params(&mut self, node: &Node, rng: &mut Rng) -> Result<Vec<Tensor>> {
         match &node.kind {
             OpKind::StageCall { stage, .. } => self.init_stage_params(stage, rng),
-            _ => Ok(vec![]),
+            other => kernels::kernel_for(other).init_params(node, rng),
         }
     }
 
     fn forward(&mut self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
         match &node.kind {
             OpKind::StageCall { stage, .. } => self.stage_forward(stage, params, inputs),
-            other => bail!("XlaEngine executes StageCall ops only, got {}", other.name()),
+            // Non-StageCall ops are not compiled into artifacts; run them on
+            // the shared host kernels instead of refusing outright.
+            other => kernels::kernel_for(other).forward(node, inputs, params),
         }
     }
 
@@ -349,7 +351,11 @@ impl Engine for XlaEngine {
                 }
                 Ok(BackwardOut { input_grads, param_grads: dparams })
             }
-            other => bail!("XlaEngine executes StageCall ops only, got {}", other.name()),
+            other => {
+                let seeded = Tensor::scalar(1.0);
+                let dy = out_grad.unwrap_or(&seeded);
+                kernels::kernel_for(other).vjp(node, inputs, params, dy)
+            }
         }
     }
 }

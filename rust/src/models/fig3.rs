@@ -140,4 +140,21 @@ mod tests {
         assert!(plan.task(g.by_name("Input").unwrap().id).is_none());
         assert!(plan.task(g.by_name("Label").unwrap().id).is_none());
     }
+
+    #[test]
+    fn normalization_would_fold_the_identity_pool() {
+        // Figure 3's Pool is deliberately a 1×1/stride-1 identity so the
+        // example matches the paper's tables. The standard pass pipeline
+        // folds it away — which is why fig3 consumers (Table 2/3 benches,
+        // the paper_partition) must use the graph as built, never a
+        // PassManager::standard()-normalized copy.
+        let mut g = build();
+        let report = crate::dag::PassManager::standard().run(&mut g).unwrap();
+        assert!(report.changed());
+        assert!(g.by_name("Pool").is_none(), "identity pool should fold");
+        assert_eq!(g.len(), 9);
+        // The partition helper still covers the *original* graph exactly.
+        let orig = build();
+        assert_eq!(paper_partition(&orig).len(), orig.len());
+    }
 }

@@ -297,7 +297,7 @@ pub fn pipeline_graph(spec: &PipelineSpec) -> Graph {
         .unwrap();
     g.set_shape(head, Shape::scalar(), DType::F32);
     // The head also consumes labels; model as an extra edge.
-    g.nodes[head].args.push(labels);
+    g.add_arg(head, labels);
     g
 }
 

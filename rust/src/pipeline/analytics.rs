@@ -159,6 +159,35 @@ mod tests {
     }
 
     #[test]
+    fn estimates_unchanged_by_pass_normalization() {
+        // Builder graphs are already normal, so running the PassManager
+        // before estimation must not move any cost term.
+        use crate::dag::PassManager;
+        let raw = TransformerConfig::bert_large().build_graph();
+        let mut normed = TransformerConfig::bert_large().build_graph();
+        assert!(!PassManager::standard().run(&mut normed).unwrap().changed());
+        let link = LinkModel::from_ms_mbps(10.0, 100.0);
+        let models: Vec<PaleoModel> = (0..4)
+            .map(|_| PaleoModel::new(DeviceProfile::with_lambda(lookup("RTX 3080").unwrap(), 0.5)))
+            .collect();
+        let a = PipelineEstimate::from_decomposition(
+            &raw,
+            &Decomposition::chain_balanced(&raw, 4),
+            &models,
+            link,
+            false,
+        );
+        let b = PipelineEstimate::from_decomposition(
+            &normed,
+            &Decomposition::chain_balanced(&normed, 4),
+            &models,
+            link,
+            false,
+        );
+        assert_eq!(a.latency(), b.latency());
+    }
+
+    #[test]
     fn eq4_reduces_to_eq3_at_nb1() {
         let e = estimate(4, "RTX 3080", LinkModel::from_ms_mbps(10.0, 100.0));
         assert!((e.pipelined_time(1) - e.latency()).abs() < 1e-12);

@@ -5,14 +5,17 @@
 
 use fusionai::compress::{topk, Codec};
 use fusionai::dag::autodiff::backward_plan;
-use fusionai::dag::{DType, Graph, OpCategory, OpKind, Shape};
+use fusionai::dag::{DType, Graph, OpCategory, OpKind, PassManager, Shape};
 use fusionai::decompose::Decomposition;
 use fusionai::dht::Dht;
+use fusionai::exec::{Engine, RefEngine};
 use fusionai::models::transformer::TransformerConfig;
 use fusionai::perf::gpus::GPU_DB;
 use fusionai::pipeline::schedule::{MicrobatchSchedule, PipeEventKind};
 use fusionai::proptesting::{check, Gen};
 use fusionai::sched::{self, PeerSpec, TaskSpec};
+use fusionai::tensor::Tensor;
+use fusionai::util::Rng;
 
 fn random_tasks(g: &mut Gen, n: usize) -> Vec<TaskSpec> {
     (0..n)
@@ -285,6 +288,153 @@ fn prop_gpipe_schedule_dependencies_hold() {
         let expect = (mbs as f64 + stages as f64 - 1.0) * 2.0;
         if (t - expect).abs() > 1e-9 {
             return Err(format!("makespan {t} vs closed form {expect}"));
+        }
+        Ok(())
+    });
+}
+
+/// Build a random op chain over `[b, f]` with deliberate junk for the
+/// pass pipeline to clean up: `Relu(Relu(x))` ladders (constant-foldable)
+/// and a dead side branch, capped by an MSE loss.
+fn random_messy_graph(g: &mut fusionai::proptesting::Gen) -> Graph {
+    let mut graph = Graph::new();
+    let b = g.usize(1, 4);
+    let f = 4 << g.usize(0, 3);
+    let mut cur = graph.placeholder("in", Shape::of(&[b, f]), DType::F32);
+    let depth = g.usize(1, 6);
+    for i in 0..depth {
+        let cur_f = *graph.node(cur).out_shape.dims().last().unwrap();
+        cur = match g.usize(0, 4) {
+            0 => {
+                // A foldable relu ladder.
+                let r1 = graph.op(&format!("r{i}a"), OpKind::Relu, &[cur]).unwrap();
+                graph.op(&format!("r{i}b"), OpKind::Relu, &[r1]).unwrap()
+            }
+            1 => graph.op(&format!("g{i}"), OpKind::Gelu, &[cur]).unwrap(),
+            2 => graph.op(&format!("s{i}"), OpKind::Softmax, &[cur]).unwrap(),
+            _ => graph
+                .op(
+                    &format!("fc{i}"),
+                    OpKind::Linear {
+                        in_features: cur_f,
+                        out_features: 4 << g.usize(0, 3),
+                        bias: g.bool(0.5),
+                    },
+                    &[cur],
+                )
+                .unwrap(),
+        };
+        if g.bool(0.3) {
+            // Dead side branch: produced, never consumed, not a loss.
+            graph.op(&format!("dead{i}"), OpKind::Relu, &[cur]).unwrap();
+        }
+    }
+    let out_f = *graph.node(cur).out_shape.dims().last().unwrap();
+    let target = graph.placeholder("target", Shape::of(&[b, out_f]), DType::F32);
+    graph.op("loss", OpKind::MseLoss, &[cur, target]).unwrap();
+    graph
+}
+
+#[test]
+fn prop_standard_pipeline_is_idempotent() {
+    check("pass-idempotence", 60, |g| {
+        let mut graph = random_messy_graph(g);
+        PassManager::standard().run(&mut graph).map_err(|e| e.to_string())?;
+        let first = graph.to_json();
+        let report = PassManager::standard().run(&mut graph).map_err(|e| e.to_string())?;
+        if report.changed() {
+            return Err("second standard run still reported changes".into());
+        }
+        if graph.to_json() != first {
+            return Err("second standard run altered the graph".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dce_leaves_valid_loss_reaching_graph() {
+    check("dce-topo-validity", 60, |g| {
+        let mut graph = random_messy_graph(g);
+        let had = graph.len();
+        PassManager::standard().run(&mut graph).map_err(|e| e.to_string())?;
+        // Still a valid graph (dense ids, consistent users, acyclic).
+        PassManager::validation().run(&mut graph).map_err(|e| e.to_string())?;
+        if graph.loss_nodes().is_empty() {
+            return Err("DCE dropped the loss".into());
+        }
+        if graph.by_name("in").is_none() {
+            return Err("DCE dropped the live input".into());
+        }
+        // Dead branches and folded relu ladders must actually be gone:
+        // every non-placeholder sink is a loss node.
+        for node in &graph.nodes {
+            if graph.users(node.id).is_empty()
+                && !matches!(node.kind, OpKind::MseLoss | OpKind::CrossEntropy { .. })
+                && node.kind.category() != OpCategory::Placeholder
+            {
+                return Err(format!("non-loss sink '{}' survived DCE", node.name));
+            }
+        }
+        if graph.len() > had {
+            return Err("passes grew the graph".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_vjp_agrees_with_finite_differences() {
+    // Randomized spot-check of registry kernels through the public Engine
+    // trait: analytic input gradients vs central differences on Σ w∘y.
+    check("kernel-vjp-fd", 40, |g| {
+        let b = g.usize(1, 3);
+        let f = 2 + g.usize(0, 5);
+        let kind = match g.usize(0, 5) {
+            0 => OpKind::Relu,
+            1 => OpKind::Gelu,
+            2 => OpKind::Softmax,
+            3 => OpKind::LayerNorm { dim: f },
+            _ => OpKind::Linear {
+                in_features: f,
+                out_features: 2 + g.usize(0, 4),
+                bias: g.bool(0.5),
+            },
+        };
+        let mut graph = Graph::new();
+        let x = graph.placeholder("x", Shape::of(&[b, f]), DType::F32);
+        let id = graph.op("op", kind, &[x]).unwrap();
+        let node = graph.node(id).clone();
+
+        let mut eng = RefEngine::new();
+        let mut rng = Rng::new(g.seed);
+        let params = eng.init_params(&node, &mut rng).map_err(|e| e.to_string())?;
+        // Nudge inputs away from relu's kink at 0.
+        let xs = Tensor::from_vec(
+            &[b, f],
+            g.vec_f32(b * f, 1.0).iter().map(|&v| v + 0.05 * v.signum()).collect(),
+        );
+        let w = Tensor::from_vec(node.out_shape.dims(), g.vec_f32(node.out_shape.numel(), 1.0));
+
+        let bwd = eng.backward(&node, &[&xs], &params, Some(&w)).map_err(|e| e.to_string())?;
+        let analytic = bwd.input_grads[0].as_ref().ok_or("no input grad")?;
+
+        let loss = |eng: &mut RefEngine, t: &Tensor| -> Result<f32, String> {
+            let y = eng.forward(&node, &[t], &params).map_err(|e| e.to_string())?;
+            Ok(y.f().iter().zip(w.f()).map(|(a, b)| a * b).sum())
+        };
+        const H: f32 = 1e-2;
+        for probe in 0..4 {
+            let idx = (probe * 2654435761usize) % (b * f);
+            let mut p = xs.clone();
+            p.f_mut()[idx] += H;
+            let mut m = xs.clone();
+            m.f_mut()[idx] -= H;
+            let fd = (loss(&mut eng, &p)? - loss(&mut eng, &m)?) / (2.0 * H);
+            let an = analytic.f()[idx];
+            if (fd - an).abs() > 4e-2 * (1.0 + fd.abs().max(an.abs())) {
+                return Err(format!("{}: fd {fd} vs analytic {an} at {idx}", node.kind.name()));
+            }
         }
         Ok(())
     });
