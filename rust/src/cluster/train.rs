@@ -46,6 +46,9 @@ pub struct TrainConfig {
     /// Save final parameters to `<artifacts>/checkpoint.bin` (what `serve`
     /// loads).
     pub save_checkpoint: bool,
+    /// Row-partition fan-out for the host GEMMs (1 = single-threaded).
+    /// Results are bitwise-independent of this value.
+    pub gemm_threads: usize,
 }
 
 impl TrainConfig {
@@ -60,6 +63,7 @@ impl TrainConfig {
             seed: 42,
             log_every: 10,
             save_checkpoint: true,
+            gemm_threads: 1,
         }
     }
 }
@@ -134,6 +138,7 @@ impl PipelineTrainer {
     /// until all steps complete.
     pub fn run(&self) -> Result<TrainReport> {
         let cfg = &self.config;
+        crate::tensor::set_gemm_threads(cfg.gemm_threads);
         let stages = self.manifest.stages.clone();
         let n_stages = stages.len();
         let batch = self.manifest.config_usize("batch").ok_or_else(|| anyhow!("manifest missing batch"))?;

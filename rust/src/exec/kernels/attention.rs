@@ -5,8 +5,8 @@ use anyhow::{bail, Result};
 
 use super::{add_row_bias, sum_rows, OpKernel};
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
-use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+use crate::exec::{BackwardOut, Scratch};
+use crate::tensor::{matmul, matmul_at, matmul_bt, softmax_lastaxis, Tensor};
 use crate::util::Rng;
 
 pub struct AttentionKernel;
@@ -34,15 +34,22 @@ impl OpKernel for AttentionKernel {
         ])
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let (heads, dim, causal) = unpack(node)?;
         let x = inputs[0];
-        let (ctx, _) = attention_core(x, params, heads, dim, causal);
+        let core = attention_core(x, params, heads, dim, causal, scratch);
         let s = x.shape();
         let (b, sl) = (s[0], s[1]);
-        // out = ctx·Wo + bo
-        let mut out = matmul(&ctx, params[2].f(), b * sl, dim, dim);
+        // out = ctx·Wo + bo (escapes as the output tensor: fresh buffer).
+        let mut out = matmul(&core.ctx, params[2].f(), b * sl, dim, dim);
         add_row_bias(&mut out, dim, params[3].f());
+        core.release(scratch);
         Ok(Tensor::from_vec(s, out))
     }
 
@@ -52,69 +59,91 @@ impl OpKernel for AttentionKernel {
         inputs: &[&Tensor],
         params: &[Tensor],
         dy: &Tensor,
+        scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let (heads, dim, causal) = unpack(node)?;
-        attention_bwd(inputs[0], params, dy, heads, dim, causal)
+        attention_bwd(inputs[0], params, dy, heads, dim, causal, scratch)
     }
 }
 
-/// Shared fwd computation: returns (concat context [B*S, D], per-(b,h)
-/// softmax probabilities P [S,S] flattened) for reuse in backward.
+/// Forward intermediates shared by forward and backward, all backed by
+/// scratch-pool buffers — callers must hand them back via [`Core::release`].
+struct Core {
+    /// `[B*S, 3D]` projected queries/keys/values.
+    qkv: Vec<f32>,
+    /// `[B*S, D]` concatenated per-head context.
+    ctx: Vec<f32>,
+    /// `[B·heads, S, S]` softmax probabilities, flattened.
+    probs: Vec<f32>,
+}
+
+impl Core {
+    fn release(self, scratch: &mut Scratch) {
+        scratch.put(self.qkv);
+        scratch.put(self.ctx);
+        scratch.put(self.probs);
+    }
+}
+
+/// Shared forward computation. Scratch buffers arrive zero-filled; the
+/// score rows are therefore written explicitly — finite logits for the
+/// visible prefix, `-inf` beyond it — before the in-place softmax.
 fn attention_core(
     x: &Tensor,
     params: &[Tensor],
     heads: usize,
     dim: usize,
     causal: bool,
-) -> (Vec<f32>, Vec<Vec<f32>>) {
-    use crate::tensor::softmax_lastaxis;
+    scratch: &mut Scratch,
+) -> Core {
     let s = x.shape();
     let (b, sl) = (s[0], s[1]);
     let hd = dim / heads;
     let scale = 1.0 / (hd as f32).sqrt();
     // qkv[B*S, 3D]
-    let mut qkv = matmul(x.f(), params[0].f(), b * sl, dim, 3 * dim);
+    let mut qkv = scratch.take(b * sl * 3 * dim);
+    crate::tensor::matmul_into(x.f(), params[0].f(), &mut qkv, b * sl, dim, 3 * dim);
     add_row_bias(&mut qkv, 3 * dim, params[1].f());
-    let mut ctx = vec![0.0f32; b * sl * dim];
-    let mut probs = Vec::with_capacity(b * heads);
-    for bi in 0..b {
-        for h in 0..heads {
-            // Q,K,V [S,hd] slices of qkv rows.
-            let q_off = h * hd;
-            let k_off = dim + h * hd;
-            let v_off = 2 * dim + h * hd;
-            let mut scores = vec![f32::NEG_INFINITY; sl * sl];
-            for i in 0..sl {
-                let qrow = &qkv[(bi * sl + i) * 3 * dim + q_off..][..hd];
-                let jmax = if causal { i + 1 } else { sl };
-                for j in 0..jmax {
-                    let krow = &qkv[(bi * sl + j) * 3 * dim + k_off..][..hd];
-                    let mut dot = 0.0;
-                    for d in 0..hd {
-                        dot += qrow[d] * krow[d];
+    let mut ctx = scratch.take(b * sl * dim);
+    let mut probs = scratch.take(b * heads * sl * sl);
+    {
+        for bi in 0..b {
+            for h in 0..heads {
+                // Q,K,V [S,hd] slices of qkv rows.
+                let q_off = h * hd;
+                let k_off = dim + h * hd;
+                let v_off = 2 * dim + h * hd;
+                let scores = &mut probs[(bi * heads + h) * sl * sl..][..sl * sl];
+                for i in 0..sl {
+                    let qrow = &qkv[(bi * sl + i) * 3 * dim + q_off..][..hd];
+                    let jmax = if causal { i + 1 } else { sl };
+                    for j in 0..jmax {
+                        let krow = &qkv[(bi * sl + j) * 3 * dim + k_off..][..hd];
+                        let mut dot = 0.0;
+                        for d in 0..hd {
+                            dot += qrow[d] * krow[d];
+                        }
+                        scores[i * sl + j] = dot * scale;
                     }
-                    scores[i * sl + j] = dot * scale;
+                    scores[i * sl + jmax..(i + 1) * sl].fill(f32::NEG_INFINITY);
+                }
+                softmax_lastaxis(scores, sl);
+                // ctx_i = Σ_j P_ij · V_j (masked positions contribute an
+                // exact 0.0 probability, so no skip is needed).
+                for i in 0..sl {
+                    for j in 0..sl {
+                        let p = scores[i * sl + j];
+                        let vrow = &qkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
+                        let crow = &mut ctx[(bi * sl + i) * dim + h * hd..][..hd];
+                        for d in 0..hd {
+                            crow[d] += p * vrow[d];
+                        }
+                    }
                 }
             }
-            softmax_lastaxis(&mut scores, sl);
-            // ctx_i = Σ_j P_ij · V_j
-            for i in 0..sl {
-                for j in 0..sl {
-                    let p = scores[i * sl + j];
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vrow = &qkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
-                    let crow = &mut ctx[(bi * sl + i) * dim + h * hd..][..hd];
-                    for d in 0..hd {
-                        crow[d] += p * vrow[d];
-                    }
-                }
-            }
-            probs.push(scores);
         }
     }
-    (ctx, probs)
+    Core { qkv, ctx, probs }
 }
 
 fn attention_bwd(
@@ -124,6 +153,7 @@ fn attention_bwd(
     heads: usize,
     dim: usize,
     causal: bool,
+    scratch: &mut Scratch,
 ) -> Result<BackwardOut> {
     let s = x.shape();
     let (b, sl) = (s[0], s[1]);
@@ -131,30 +161,31 @@ fn attention_bwd(
     let scale = 1.0 / (hd as f32).sqrt();
     let rows = b * sl;
 
-    // Recompute forward intermediates.
-    let mut qkv = matmul(x.f(), params[0].f(), rows, dim, 3 * dim);
-    add_row_bias(&mut qkv, 3 * dim, params[1].f());
-    let (ctx, probs) = attention_core(x, params, heads, dim, causal);
+    // One forward recomputation, shared with the output projection.
+    let core = attention_core(x, params, heads, dim, causal, scratch);
 
     // out = ctx·Wo + bo  ⇒  dctx = dy·Woᵀ ; dWo = ctxᵀ·dy ; dbo = Σ dy.
-    let dctx = matmul_bt(dy.f(), params[2].f(), rows, dim, dim);
-    let dwo = matmul_at(&ctx, dy.f(), dim, rows, dim);
+    let mut dctx = scratch.take(rows * dim);
+    crate::tensor::matmul_bt_into(dy.f(), params[2].f(), &mut dctx, rows, dim, dim);
+    let dwo = matmul_at(&core.ctx, dy.f(), dim, rows, dim);
     let dbo = sum_rows(dy.f(), dim);
 
-    // Per (batch, head): dP, dscores, dQ, dK, dV.
-    let mut dqkv = vec![0.0f32; rows * 3 * dim];
+    // Per (batch, head): dP, dscores, dQ, dK, dV. dp/ds are fully
+    // rewritten every head, so one scratch buffer each serves all heads.
+    let mut dqkv = scratch.take(rows * 3 * dim);
+    let mut dp = scratch.take(sl * sl);
+    let mut ds = scratch.take(sl * sl);
     for bi in 0..b {
         for h in 0..heads {
-            let p = &probs[bi * heads + h]; // [S,S]
+            let p = &core.probs[(bi * heads + h) * sl * sl..][..sl * sl];
             let q_off = h * hd;
             let k_off = dim + h * hd;
             let v_off = 2 * dim + h * hd;
             // dP_ij = dctx_i · V_j ; dV_j = Σ_i P_ij dctx_i
-            let mut dp = vec![0.0f32; sl * sl];
             for i in 0..sl {
                 let dci = &dctx[(bi * sl + i) * dim + h * hd..][..hd];
                 for j in 0..sl {
-                    let vrow = &qkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
+                    let vrow = &core.qkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
                     let mut dot = 0.0;
                     for d in 0..hd {
                         dot += dci[d] * vrow[d];
@@ -162,16 +193,13 @@ fn attention_bwd(
                     dp[i * sl + j] = dot;
                     // dV
                     let pv = p[i * sl + j];
-                    if pv != 0.0 {
-                        let dvrow = &mut dqkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
-                        for d in 0..hd {
-                            dvrow[d] += pv * dci[d];
-                        }
+                    let dvrow = &mut dqkv[(bi * sl + j) * 3 * dim + v_off..][..hd];
+                    for d in 0..hd {
+                        dvrow[d] += pv * dci[d];
                     }
                 }
             }
             // softmax backward per row: ds = P ∘ (dP − Σ_j dP·P)
-            let mut ds = vec![0.0f32; sl * sl];
             for i in 0..sl {
                 let o = i * sl;
                 let dot: f32 = (0..sl).map(|j| dp[o + j] * p[o + j]).sum();
@@ -188,8 +216,8 @@ fn attention_bwd(
                     }
                     let (qi, kj) = ((bi * sl + i) * 3 * dim, (bi * sl + j) * 3 * dim);
                     for d in 0..hd {
-                        dqkv[qi + q_off + d] += g * qkv[kj + k_off + d];
-                        dqkv[kj + k_off + d] += g * qkv[qi + q_off + d];
+                        dqkv[qi + q_off + d] += g * core.qkv[kj + k_off + d];
+                        dqkv[kj + k_off + d] += g * core.qkv[qi + q_off + d];
                     }
                 }
             }
@@ -200,6 +228,12 @@ fn attention_bwd(
     let dx = matmul_bt(&dqkv, params[0].f(), rows, 3 * dim, dim);
     let dwqkv = matmul_at(x.f(), &dqkv, dim, rows, 3 * dim);
     let dbqkv = sum_rows(&dqkv, 3 * dim);
+
+    scratch.put(ds);
+    scratch.put(dp);
+    scratch.put(dqkv);
+    scratch.put(dctx);
+    core.release(scratch);
 
     Ok(BackwardOut {
         input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
@@ -253,8 +287,9 @@ mod tests {
         for d in 0..8 {
             b.f_mut()[3 * 8 + d] += 1.0;
         }
-        let ya = kernel.forward(&node, &[&a], &params).unwrap();
-        let yb = kernel.forward(&node, &[&b], &params).unwrap();
+        let mut scratch = Scratch::new();
+        let ya = kernel.forward(&node, &[&a], &params, &mut scratch).unwrap();
+        let yb = kernel.forward(&node, &[&b], &params, &mut scratch).unwrap();
         for t in 0..3 {
             for d in 0..8 {
                 assert!(
@@ -266,5 +301,27 @@ mod tests {
         // And the last token's output must differ.
         let diff: f32 = (0..8).map(|d| (ya.f()[3 * 8 + d] - yb.f()[3 * 8 + d]).abs()).sum();
         assert!(diff > 1e-3);
+    }
+
+    /// Pool reuse must not change attention numerics: the second forward
+    /// (served from recycled buffers) is bitwise-identical to the first.
+    #[test]
+    fn scratch_reuse_is_bitwise_stable() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 3, 8]), DType::F32);
+        let id =
+            g.op("attn", OpKind::Attention { heads: 2, dim: 8, causal: true }, &[x]).unwrap();
+        let node = g.node(id).clone();
+        let kernel = kernel_for(&node.kind);
+        let mut rng = Rng::new(5);
+        let params = kernel.init_params(&node, &mut rng).unwrap();
+        let a = Tensor::randn(&[2, 3, 8], 1.0, &mut rng);
+        let mut scratch = Scratch::new();
+        let y1 = kernel.forward(&node, &[&a], &params, &mut scratch).unwrap();
+        assert_eq!(scratch.hits(), 0);
+        let y2 = kernel.forward(&node, &[&a], &params, &mut scratch).unwrap();
+        assert!(scratch.hits() > 0, "second call must reuse pooled buffers");
+        let bits = |t: &Tensor| t.f().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&y1), bits(&y2));
     }
 }

@@ -4,7 +4,7 @@ use anyhow::{bail, Result};
 
 use super::OpKernel;
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::Tensor;
 
 pub struct ConcatKernel;
@@ -21,7 +21,13 @@ impl OpKernel for ConcatKernel {
         "concat"
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let axis = unpack(node)?;
         let base = inputs[0].shape();
         let outer: usize = base[..axis].iter().product();
@@ -51,6 +57,7 @@ impl OpKernel for ConcatKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let axis = unpack(node)?;
         let base = inputs[0].shape();

@@ -1,11 +1,16 @@
 //! Spatial kernels: 2-D convolution and max pooling over NCHW.
+//!
+//! Conv2d lowers to im2col + GEMM: per image, patches are gathered into a
+//! `[in_ch·k², oh·ow]` column buffer (from the scratch pool) and the
+//! convolution becomes `W[out_ch, in_ch·k²] · cols`, which hits the
+//! blocked matmul instead of a 7-deep scalar loop nest.
 
 use anyhow::{bail, Result};
 
 use super::OpKernel;
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
-use crate::tensor::Tensor;
+use crate::exec::{BackwardOut, Scratch};
+use crate::tensor::{matmul_at_into, matmul_bt_into, matmul_into, Tensor};
 use crate::util::Rng;
 
 pub struct Conv2dKernel;
@@ -34,9 +39,15 @@ impl OpKernel for Conv2dKernel {
         ])
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let (in_ch, out_ch, k, stride, pad) = unpack_conv(node)?;
-        conv2d_fwd(inputs[0], &params[0], &params[1], in_ch, out_ch, k, stride, pad)
+        conv2d_fwd(inputs[0], &params[0], &params[1], in_ch, out_ch, k, stride, pad, scratch)
     }
 
     fn vjp(
@@ -45,9 +56,10 @@ impl OpKernel for Conv2dKernel {
         inputs: &[&Tensor],
         params: &[Tensor],
         dy: &Tensor,
+        scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let (in_ch, out_ch, k, stride, pad) = unpack_conv(node)?;
-        conv2d_bwd(inputs[0], &params[0], dy, in_ch, out_ch, k, stride, pad)
+        conv2d_bwd(inputs[0], &params[0], dy, in_ch, out_ch, k, stride, pad, scratch)
     }
 }
 
@@ -58,7 +70,13 @@ impl OpKernel for MaxPool2dKernel {
         "maxpool2d"
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let OpKind::MaxPool2d { kernel, stride } = node.kind else {
             bail!("MaxPool2dKernel dispatched on {}", node.kind.name());
         };
@@ -71,6 +89,7 @@ impl OpKernel for MaxPool2dKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let OpKind::MaxPool2d { kernel, stride } = node.kind else {
             bail!("MaxPool2dKernel dispatched on {}", node.kind.name());
@@ -85,6 +104,44 @@ impl OpKernel for MaxPool2dKernel {
     }
 }
 
+/// Gather one image's patches: `cols[(ic·k+ky)·k+kx, oy·ow+ox]` =
+/// `x[ni,ic,iy,ix]` or `0.0` for padding. Every entry is written — the
+/// buffer is recycled across images, so stale values must never survive.
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    xf: &[f32],
+    cols: &mut [f32],
+    ni: usize,
+    in_ch: usize,
+    h: usize,
+    wd: usize,
+    (oh, ow): (usize, usize),
+    k: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let ohow = oh * ow;
+    for ic in 0..in_ch {
+        for ky in 0..k {
+            for kx in 0..k {
+                let row = ((ic * k + ky) * k + kx) * ohow;
+                for oy in 0..oh {
+                    let iy = oy * stride + ky;
+                    let in_y = iy >= pad && iy - pad < h;
+                    for ox in 0..ow {
+                        let ix = ox * stride + kx;
+                        cols[row + oy * ow + ox] = if in_y && ix >= pad && ix - pad < wd {
+                            xf[((ni * in_ch + ic) * h + (iy - pad)) * wd + (ix - pad)]
+                        } else {
+                            0.0
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn conv2d_fwd(
     x: &Tensor,
@@ -95,42 +152,29 @@ fn conv2d_fwd(
     k: usize,
     stride: usize,
     pad: usize,
+    scratch: &mut Scratch,
 ) -> Result<Tensor> {
     let s = x.shape();
     let (n, h, wd) = (s[0], s[2], s[3]);
     let oh = (h + 2 * pad - k) / stride + 1;
     let ow = (wd + 2 * pad - k) / stride + 1;
-    let xf = x.f();
-    let wf = w.f();
-    let bf = b.f();
-    let mut out = vec![0.0f32; n * out_ch * oh * ow];
+    let (xf, wf, bf) = (x.f(), w.f(), b.f());
+    let ick2 = in_ch * k * k;
+    let ohow = oh * ow;
+    let mut out = vec![0.0f32; n * out_ch * ohow];
+    let mut cols = scratch.take(ick2 * ohow);
     for ni in 0..n {
-        for oc in 0..out_ch {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = bf[oc];
-                    for ic in 0..in_ch {
-                        for ky in 0..k {
-                            for kx in 0..k {
-                                let iy = oy * stride + ky;
-                                let ix = ox * stride + kx;
-                                if iy < pad || ix < pad {
-                                    continue;
-                                }
-                                let (iy, ix) = (iy - pad, ix - pad);
-                                if iy >= h || ix >= wd {
-                                    continue;
-                                }
-                                acc += xf[((ni * in_ch + ic) * h + iy) * wd + ix]
-                                    * wf[((oc * in_ch + ic) * k + ky) * k + kx];
-                            }
-                        }
-                    }
-                    out[((ni * out_ch + oc) * oh + oy) * ow + ox] = acc;
-                }
+        im2col(xf, &mut cols, ni, in_ch, h, wd, (oh, ow), k, stride, pad);
+        // W's flat layout [out_ch, in_ch, k, k] is exactly [out_ch, ick2].
+        let yimg = &mut out[ni * out_ch * ohow..][..out_ch * ohow];
+        matmul_into(wf, &cols, yimg, out_ch, ick2, ohow);
+        for (oc, row) in yimg.chunks_mut(ohow).enumerate() {
+            for v in row.iter_mut() {
+                *v += bf[oc];
             }
         }
     }
+    scratch.put(cols);
     Ok(Tensor::from_vec(&[n, out_ch, oh, ow], out))
 }
 
@@ -144,46 +188,61 @@ fn conv2d_bwd(
     k: usize,
     stride: usize,
     pad: usize,
+    scratch: &mut Scratch,
 ) -> Result<BackwardOut> {
     let s = x.shape();
     let (n, h, wd) = (s[0], s[2], s[3]);
     let os = dy.shape();
     let (oh, ow) = (os[2], os[3]);
-    let xf = x.f();
-    let wf = w.f();
-    let dyf = dy.f();
+    let (xf, wf, dyf) = (x.f(), w.f(), dy.f());
+    let ick2 = in_ch * k * k;
+    let ohow = oh * ow;
     let mut dx = vec![0.0f32; xf.len()];
     let mut dw = vec![0.0f32; wf.len()];
     let mut db = vec![0.0f32; out_ch];
+    let mut cols = scratch.take(ick2 * ohow);
+    let mut dcols = scratch.take(ick2 * ohow);
+    let mut dwp = scratch.take(out_ch * ick2);
     for ni in 0..n {
-        for oc in 0..out_ch {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let g = dyf[((ni * out_ch + oc) * oh + oy) * ow + ox];
-                    db[oc] += g;
-                    for ic in 0..in_ch {
-                        for ky in 0..k {
-                            for kx in 0..k {
-                                let iy = oy * stride + ky;
-                                let ix = ox * stride + kx;
-                                if iy < pad || ix < pad {
-                                    continue;
-                                }
-                                let (iy, ix) = (iy - pad, ix - pad);
-                                if iy >= h || ix >= wd {
-                                    continue;
-                                }
-                                let xi = ((ni * in_ch + ic) * h + iy) * wd + ix;
-                                let wi = ((oc * in_ch + ic) * k + ky) * k + kx;
-                                dx[xi] += g * wf[wi];
-                                dw[wi] += g * xf[xi];
+        let dyimg = &dyf[ni * out_ch * ohow..][..out_ch * ohow];
+        for (oc, row) in dyimg.chunks(ohow).enumerate() {
+            for &g in row {
+                db[oc] += g;
+            }
+        }
+        im2col(xf, &mut cols, ni, in_ch, h, wd, (oh, ow), k, stride, pad);
+        // dW += dy_img[out_ch, ohow] · colsᵀ (accumulated across images).
+        matmul_bt_into(dyimg, &cols, &mut dwp, out_ch, ohow, ick2);
+        for (d, &p) in dw.iter_mut().zip(&dwp) {
+            *d += p;
+        }
+        // dcols[ick2, ohow] = Wᵀ · dy_img, then col2im scatter-add.
+        matmul_at_into(wf, dyimg, &mut dcols, ick2, out_ch, ohow);
+        for ic in 0..in_ch {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let row = ((ic * k + ky) * k + kx) * ohow;
+                    for oy in 0..oh {
+                        let iy = oy * stride + ky;
+                        if iy < pad || iy - pad >= h {
+                            continue;
+                        }
+                        for ox in 0..ow {
+                            let ix = ox * stride + kx;
+                            if ix < pad || ix - pad >= wd {
+                                continue;
                             }
+                            dx[((ni * in_ch + ic) * h + (iy - pad)) * wd + (ix - pad)] +=
+                                dcols[row + oy * ow + ox];
                         }
                     }
                 }
             }
         }
     }
+    scratch.put(dwp);
+    scratch.put(dcols);
+    scratch.put(cols);
     Ok(BackwardOut {
         input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
         param_grads: vec![

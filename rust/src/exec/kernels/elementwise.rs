@@ -4,7 +4,7 @@ use anyhow::Result;
 
 use super::OpKernel;
 use crate::dag::Node;
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::{gelu, gelu_grad, Tensor};
 
 pub struct AddKernel;
@@ -14,7 +14,13 @@ impl OpKernel for AddKernel {
         "add"
     }
 
-    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         Ok(inputs[0].zip(inputs[1], |a, b| a + b))
     }
 
@@ -24,6 +30,7 @@ impl OpKernel for AddKernel {
         _inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         Ok(BackwardOut {
             input_grads: vec![Some(dy.clone()), Some(dy.clone())],
@@ -39,7 +46,13 @@ impl OpKernel for MultiplyKernel {
         "multiply"
     }
 
-    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         Ok(inputs[0].zip(inputs[1], |a, b| a * b))
     }
 
@@ -49,6 +62,7 @@ impl OpKernel for MultiplyKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         Ok(BackwardOut {
             input_grads: vec![
@@ -67,7 +81,13 @@ impl OpKernel for ReluKernel {
         "relu"
     }
 
-    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         Ok(inputs[0].map(|x| x.max(0.0)))
     }
 
@@ -77,6 +97,7 @@ impl OpKernel for ReluKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         Ok(BackwardOut {
             input_grads: vec![Some(dy.zip(inputs[0], |g, x| if x > 0.0 { g } else { 0.0 }))],
@@ -92,7 +113,13 @@ impl OpKernel for GeluKernel {
         "gelu"
     }
 
-    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         Ok(inputs[0].map(gelu))
     }
 
@@ -102,6 +129,7 @@ impl OpKernel for GeluKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         Ok(BackwardOut {
             input_grads: vec![Some(dy.zip(inputs[0], |g, x| g * gelu_grad(x)))],

@@ -4,7 +4,7 @@ use anyhow::{bail, Result};
 
 use super::OpKernel;
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -27,7 +27,13 @@ impl OpKernel for EmbeddingKernel {
         Ok(vec![Tensor::randn(&[vocab, dim], 0.02, rng)])
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let (vocab, dim) = unpack(node)?;
         let ids = inputs[0];
         let tf = params[0].f();
@@ -50,6 +56,7 @@ impl OpKernel for EmbeddingKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let (vocab, dim) = unpack(node)?;
         let mut dtable = Tensor::zeros(&[vocab, dim]);
@@ -83,7 +90,8 @@ mod tests {
         let params = kernel.init_params(&node, &mut rng).unwrap();
         let ids = Tensor::from_ivec(&[3], vec![1, 3, 1]);
         let dy = Tensor::from_vec(&[3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let bwd = kernel.vjp(&node, &[&ids], &params, &dy).unwrap();
+        let mut scratch = crate::exec::Scratch::new();
+        let bwd = kernel.vjp(&node, &[&ids], &params, &dy, &mut scratch).unwrap();
         let dt = bwd.param_grads[0].f();
         // row 1 accumulates positions 0 and 2; row 3 gets position 1.
         assert_eq!(&dt[2..4], &[1.0 + 5.0, 2.0 + 6.0]);
@@ -101,6 +109,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let params = kernel.init_params(&node, &mut rng).unwrap();
         let ids = Tensor::from_ivec(&[1], vec![9]);
-        assert!(kernel.forward(&node, &[&ids], &params).is_err());
+        let mut scratch = crate::exec::Scratch::new();
+        assert!(kernel.forward(&node, &[&ids], &params, &mut scratch).is_err());
     }
 }

@@ -5,8 +5,10 @@ use anyhow::{bail, Result};
 
 use super::{add_row_bias, sum_rows, OpKernel};
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
-use crate::tensor::{gelu, gelu_grad, matmul, matmul_at, matmul_bt, Tensor};
+use crate::exec::{BackwardOut, Scratch};
+use crate::tensor::{
+    gelu, gelu_grad, matmul, matmul_at, matmul_bt, matmul_bt_into, matmul_into, Tensor,
+};
 use crate::util::Rng;
 
 pub struct FeedForwardKernel;
@@ -35,15 +37,28 @@ impl OpKernel for FeedForwardKernel {
         ])
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let (dim, hidden) = unpack(node)?;
         let x = inputs[0];
         let rows = x.numel() / dim;
-        let mut h = matmul(x.f(), params[0].f(), rows, dim, hidden);
+        // Hidden pre-activation and activation are intra-call temporaries.
+        let mut h = scratch.take(rows * hidden);
+        matmul_into(x.f(), params[0].f(), &mut h, rows, dim, hidden);
         add_row_bias(&mut h, hidden, params[1].f());
-        let a: Vec<f32> = h.iter().map(|&v| gelu(v)).collect();
+        let mut a = scratch.take(rows * hidden);
+        for (av, &hv) in a.iter_mut().zip(&h) {
+            *av = gelu(hv);
+        }
         let mut y = matmul(&a, params[2].f(), rows, hidden, dim);
         add_row_bias(&mut y, dim, params[3].f());
+        scratch.put(a);
+        scratch.put(h);
         Ok(Tensor::from_vec(x.shape(), y))
     }
 
@@ -53,24 +68,36 @@ impl OpKernel for FeedForwardKernel {
         inputs: &[&Tensor],
         params: &[Tensor],
         dy: &Tensor,
+        scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let (dim, hidden) = unpack(node)?;
         let x = inputs[0];
         let rows = x.numel() / dim;
         // Recompute h and a.
-        let mut h = matmul(x.f(), params[0].f(), rows, dim, hidden);
+        let mut h = scratch.take(rows * hidden);
+        matmul_into(x.f(), params[0].f(), &mut h, rows, dim, hidden);
         add_row_bias(&mut h, hidden, params[1].f());
-        let a: Vec<f32> = h.iter().map(|&v| gelu(v)).collect();
+        let mut a = scratch.take(rows * hidden);
+        for (av, &hv) in a.iter_mut().zip(&h) {
+            *av = gelu(hv);
+        }
         // y = a·W2 + b2
-        let da = matmul_bt(dy.f(), params[2].f(), rows, dim, hidden);
+        let mut da = scratch.take(rows * hidden);
+        matmul_bt_into(dy.f(), params[2].f(), &mut da, rows, dim, hidden);
         let dw2 = matmul_at(&a, dy.f(), hidden, rows, dim);
         let db2 = sum_rows(dy.f(), dim);
-        // a = gelu(h)
-        let dh: Vec<f32> = da.iter().zip(&h).map(|(&g, &hv)| g * gelu_grad(hv)).collect();
+        // a = gelu(h): overwrite da in place with dh = da ∘ gelu'(h).
+        let mut dh = da;
+        for (g, &hv) in dh.iter_mut().zip(&h) {
+            *g *= gelu_grad(hv);
+        }
         // h = x·W1 + b1
         let dx = matmul_bt(&dh, params[0].f(), rows, hidden, dim);
         let dw1 = matmul_at(x.f(), &dh, dim, rows, hidden);
         let db1 = sum_rows(&dh, hidden);
+        scratch.put(dh);
+        scratch.put(a);
+        scratch.put(h);
         Ok(BackwardOut {
             input_grads: vec![Some(Tensor::from_vec(x.shape(), dx))],
             param_grads: vec![

@@ -5,7 +5,7 @@ use anyhow::{bail, Result};
 
 use super::OpKernel;
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -16,7 +16,13 @@ impl OpKernel for PlaceholderKernel {
         "placeholder"
     }
 
-    fn forward(&self, _node: &Node, _inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        _inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         bail!("placeholders are fed, not executed")
     }
 
@@ -26,6 +32,7 @@ impl OpKernel for PlaceholderKernel {
         _inputs: &[&Tensor],
         _params: &[Tensor],
         _dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         bail!("placeholders have no backward")
     }
@@ -45,7 +52,13 @@ impl OpKernel for VariableKernel {
         Ok(vec![Tensor::randn(node.out_shape.dims(), 0.02, rng)])
     }
 
-    fn forward(&self, _node: &Node, _inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        _inputs: &[&Tensor],
+        params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         Ok(params[0].clone())
     }
 
@@ -55,6 +68,7 @@ impl OpKernel for VariableKernel {
         _inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         Ok(BackwardOut { input_grads: vec![], param_grads: vec![dy.clone()] })
     }

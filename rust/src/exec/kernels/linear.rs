@@ -4,7 +4,7 @@ use anyhow::{bail, Result};
 
 use super::{add_row_bias, sum_rows, OpKernel};
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
 use crate::util::Rng;
 
@@ -34,7 +34,15 @@ impl OpKernel for LinearKernel {
         Ok(p)
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+    // Every buffer here escapes as an output tensor, so nothing comes from
+    // the scratch pool (its buffers must stay inside the call).
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let (in_f, out_f, bias) = unpack(node)?;
         let x = inputs[0];
         let m = x.numel() / in_f;
@@ -53,6 +61,7 @@ impl OpKernel for LinearKernel {
         inputs: &[&Tensor],
         params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let (in_f, out_f, bias) = unpack(node)?;
         let x = inputs[0];

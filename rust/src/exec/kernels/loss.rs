@@ -4,7 +4,7 @@ use anyhow::{bail, Result};
 
 use super::OpKernel;
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::{softmax_lastaxis, Tensor};
 
 pub struct CrossEntropyKernel;
@@ -21,10 +21,16 @@ impl OpKernel for CrossEntropyKernel {
         "cross_entropy"
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let weight = unpack_ce(node)?;
         let (labels, logits) = split_ce_inputs(inputs)?;
-        Ok(Tensor::scalar(cross_entropy_fwd(logits, labels) * weight as f32))
+        Ok(Tensor::scalar(cross_entropy_fwd(logits, labels, scratch) * weight as f32))
     }
 
     fn vjp(
@@ -33,10 +39,13 @@ impl OpKernel for CrossEntropyKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let weight = unpack_ce(node)?;
         let (labels, logits) = split_ce_inputs(inputs)?;
         let scale = dy.item() * weight as f32;
+        // The probability buffer escapes as dlogits, so it is allocated
+        // fresh rather than drawn from the pool.
         let dlogits = cross_entropy_bwd(logits, labels, scale);
         // Align grads with the arg order (labels get None).
         let grads = if inputs[0].is_f32() {
@@ -55,7 +64,13 @@ impl OpKernel for MseLossKernel {
         "mse_loss"
     }
 
-    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let a = inputs[0].f();
         let b = inputs[1].f();
         let n = a.len() as f32;
@@ -69,6 +84,7 @@ impl OpKernel for MseLossKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let a = inputs[0].f();
         let b = inputs[1].f();
@@ -95,15 +111,17 @@ fn split_ce_inputs<'a>(inputs: &[&'a Tensor]) -> Result<(&'a Tensor, &'a Tensor)
     }
 }
 
-fn cross_entropy_fwd(logits: &Tensor, labels: &Tensor) -> f32 {
+fn cross_entropy_fwd(logits: &Tensor, labels: &Tensor, scratch: &mut Scratch) -> f32 {
     let c = *logits.shape().last().unwrap();
     let n = logits.numel() / c;
-    let mut probs = logits.f().to_vec();
+    let mut probs = scratch.take(logits.numel());
+    probs.copy_from_slice(logits.f());
     softmax_lastaxis(&mut probs, c);
     let mut loss = 0.0f32;
     for (r, &lab) in labels.i().iter().enumerate() {
         loss -= (probs[r * c + lab as usize]).max(1e-12).ln();
     }
+    scratch.put(probs);
     loss / n as f32
 }
 
@@ -146,7 +164,8 @@ mod tests {
         let labels = Tensor::from_ivec(&[4], vec![0, 2, 1, 1]);
         let logits = Tensor::randn(&[4, 3], 1.0, &mut rng);
         let seed = Tensor::scalar(1.0);
-        let bwd = kernel.vjp(&node, &[&labels, &logits], &[], &seed).unwrap();
+        let mut scratch = Scratch::new();
+        let bwd = kernel.vjp(&node, &[&labels, &logits], &[], &seed, &mut scratch).unwrap();
         assert!(bwd.input_grads[0].is_none());
         let analytic = bwd.input_grads[1].as_ref().unwrap();
         const H: f32 = 1e-3;
@@ -155,8 +174,8 @@ mod tests {
             p.f_mut()[idx] += H;
             let mut m = logits.clone();
             m.f_mut()[idx] -= H;
-            let fp = kernel.forward(&node, &[&labels, &p], &[]).unwrap().item();
-            let fm = kernel.forward(&node, &[&labels, &m], &[]).unwrap().item();
+            let fp = kernel.forward(&node, &[&labels, &p], &[], &mut scratch).unwrap().item();
+            let fm = kernel.forward(&node, &[&labels, &m], &[], &mut scratch).unwrap().item();
             let fd = (fp - fm) / (2.0 * H);
             assert!((fd - analytic.f()[idx]).abs() < 2e-3, "idx {idx}");
         }
@@ -173,7 +192,9 @@ mod tests {
         let kernel = kernel_for(&node.kind);
         let labels = Tensor::from_ivec(&[2], vec![3, 6]);
         let logits = Tensor::zeros(&[2, 7]);
-        let loss = kernel.forward(&node, &[&labels, &logits], &[]).unwrap().item();
+        let mut scratch = Scratch::new();
+        let loss =
+            kernel.forward(&node, &[&labels, &logits], &[], &mut scratch).unwrap().item();
         assert!((loss - (7.0f32).ln()).abs() < 1e-5);
     }
 
@@ -189,7 +210,8 @@ mod tests {
         let kernel = kernel_for(&node.kind);
         let x = Tensor::zeros(&[2, 3]);
         let y = Tensor::zeros(&[2, 3]);
-        let err = kernel.forward(&node, &[&x, &y], &[]).unwrap_err();
+        let mut scratch = Scratch::new();
+        let err = kernel.forward(&node, &[&x, &y], &[], &mut scratch).unwrap_err();
         assert!(err.to_string().contains("i32 label"));
     }
 }

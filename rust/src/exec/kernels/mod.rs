@@ -22,7 +22,7 @@ pub mod stage;
 use anyhow::Result;
 
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -30,6 +30,9 @@ pub use stage::stagecall_unsupported;
 
 /// One operator family's execution rules. Kernels are stateless unit
 /// structs; all instance data comes from the [`Node`] and its tensors.
+/// Intra-call f32 temporaries come from the engine-owned [`Scratch`] pool
+/// (take zero-filled, put back before returning) instead of fresh
+/// allocations; buffers that escape as output tensors never do.
 pub trait OpKernel: Sync {
     /// Kernel name, for error messages and logs.
     fn name(&self) -> &'static str;
@@ -40,7 +43,13 @@ pub trait OpKernel: Sync {
     }
 
     /// Forward: `inputs` aligned with `node.args`.
-    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor>;
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor>;
 
     /// Vector-Jacobian product: pull `dy` back onto inputs and params
     /// (rematerializing forward intermediates as needed).
@@ -50,6 +59,7 @@ pub trait OpKernel: Sync {
         inputs: &[&Tensor],
         params: &[Tensor],
         dy: &Tensor,
+        scratch: &mut Scratch,
     ) -> Result<BackwardOut>;
 }
 
@@ -129,15 +139,16 @@ pub(crate) mod testutil {
             .collect();
         let input_refs: Vec<&Tensor> = inputs.iter().collect();
 
-        let out = kernel.forward(&node, &input_refs, &params).unwrap();
+        let mut scratch = Scratch::new();
+        let out = kernel.forward(&node, &input_refs, &params, &mut scratch).unwrap();
         let w: Vec<f32> = (0..out.numel()).map(|_| rng.normal() as f32).collect();
         let weight = Tensor::from_vec(out.shape(), w);
-        let loss = |inputs: &[&Tensor], params: &[Tensor]| -> f32 {
-            let y = kernel.forward(&node, inputs, params).unwrap();
+        let loss = |inputs: &[&Tensor], params: &[Tensor], scratch: &mut Scratch| -> f32 {
+            let y = kernel.forward(&node, inputs, params, scratch).unwrap();
             y.f().iter().zip(weight.f()).map(|(&a, &b)| a * b).sum()
         };
 
-        let bwd = kernel.vjp(&node, &input_refs, &params, &weight).unwrap();
+        let bwd = kernel.vjp(&node, &input_refs, &params, &weight, &mut scratch).unwrap();
 
         // Check input grads.
         const H: f32 = 1e-2;
@@ -164,7 +175,8 @@ pub(crate) mod testutil {
                 };
                 let rp: Vec<&Tensor> = plus.iter().collect();
                 let rm: Vec<&Tensor> = minus.iter().collect();
-                let fd = (loss(&rp, &params) - loss(&rm, &params)) / (2.0 * H);
+                let fd =
+                    (loss(&rp, &params, &mut scratch) - loss(&rm, &params, &mut scratch)) / (2.0 * H);
                 let an = analytic.f()[idx];
                 assert!(
                     (fd - an).abs() <= tol * (1.0 + fd.abs().max(an.abs())),
@@ -182,7 +194,9 @@ pub(crate) mod testutil {
                 pp[pi].f_mut()[idx] += H;
                 let mut pm = params.clone();
                 pm[pi].f_mut()[idx] -= H;
-                let fd = (loss(&input_refs, &pp) - loss(&input_refs, &pm)) / (2.0 * H);
+                let fd = (loss(&input_refs, &pp, &mut scratch)
+                    - loss(&input_refs, &pm, &mut scratch))
+                    / (2.0 * H);
                 let an = analytic.f()[idx];
                 assert!(
                     (fd - an).abs() <= tol * (1.0 + fd.abs().max(an.abs())),
@@ -235,6 +249,7 @@ mod tests {
         let t = Tensor::zeros(&[2, 2]);
         // Dispatching a Relu node to the Linear kernel is a programming
         // error and must fail loudly, not silently misexecute.
-        assert!(linear::LinearKernel.forward(&node, &[&t], &[]).is_err());
+        let mut scratch = Scratch::new();
+        assert!(linear::LinearKernel.forward(&node, &[&t], &[], &mut scratch).is_err());
     }
 }

@@ -4,7 +4,7 @@ use anyhow::{bail, Result};
 
 use super::OpKernel;
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::{softmax_lastaxis, Tensor};
 use crate::util::Rng;
 
@@ -27,9 +27,15 @@ impl OpKernel for LayerNormKernel {
         Ok(vec![Tensor::from_vec(&[dim], vec![1.0; dim]), Tensor::zeros(&[dim])])
     }
 
-    fn forward(&self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let dim = unpack_ln(node)?;
-        Ok(layernorm_fwd(inputs[0], &params[0], &params[1], dim).0)
+        Ok(layernorm_fwd(inputs[0], &params[0], &params[1], dim))
     }
 
     fn vjp(
@@ -38,6 +44,7 @@ impl OpKernel for LayerNormKernel {
         inputs: &[&Tensor],
         params: &[Tensor],
         dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         let dim = unpack_ln(node)?;
         layernorm_bwd(inputs[0], &params[0], dy, dim)
@@ -51,7 +58,13 @@ impl OpKernel for SoftmaxKernel {
         "softmax"
     }
 
-    fn forward(&self, _node: &Node, inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        _node: &Node,
+        inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         let mut out = inputs[0].clone();
         let row = *out.shape().last().unwrap();
         softmax_lastaxis(out.f_mut(), row);
@@ -64,20 +77,25 @@ impl OpKernel for SoftmaxKernel {
         inputs: &[&Tensor],
         _params: &[Tensor],
         dy: &Tensor,
+        scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
-        let mut y = inputs[0].clone();
-        let row = *y.shape().last().unwrap();
-        softmax_lastaxis(y.f_mut(), row);
-        let yf = y.f();
+        // Rematerialized y is intra-call only — recompute into a pooled
+        // buffer instead of cloning the input tensor.
+        let xf = inputs[0].f();
+        let row = *inputs[0].shape().last().unwrap();
+        let mut y = scratch.take(xf.len());
+        y.copy_from_slice(xf);
+        softmax_lastaxis(&mut y, row);
         let gf = dy.f();
-        let mut dx = vec![0.0f32; yf.len()];
-        for r in 0..yf.len() / row {
+        let mut dx = vec![0.0f32; y.len()];
+        for r in 0..y.len() / row {
             let o = r * row;
-            let dot: f32 = (0..row).map(|j| gf[o + j] * yf[o + j]).sum();
+            let dot: f32 = (0..row).map(|j| gf[o + j] * y[o + j]).sum();
             for j in 0..row {
-                dx[o + j] = yf[o + j] * (gf[o + j] - dot);
+                dx[o + j] = y[o + j] * (gf[o + j] - dot);
             }
         }
+        scratch.put(y);
         Ok(BackwardOut {
             input_grads: vec![Some(Tensor::from_vec(inputs[0].shape(), dx))],
             param_grads: vec![],
@@ -85,36 +103,39 @@ impl OpKernel for SoftmaxKernel {
     }
 }
 
-/// Returns (output, per-row (mean, inv_std)) — backward recomputes them.
-fn layernorm_fwd(
-    x: &Tensor,
-    gamma: &Tensor,
-    beta: &Tensor,
-    dim: usize,
-) -> (Tensor, Vec<(f32, f32)>) {
+/// Per-row (mean, inv_std) — shared by forward and backward so backward no
+/// longer recomputes the whole normalized output just to discard it.
+fn layernorm_stats(xf: &[f32], dim: usize) -> Vec<(f32, f32)> {
     const EPS: f32 = 1e-5;
-    let xf = x.f();
-    let gf = gamma.f();
-    let bf = beta.f();
     let rows = xf.len() / dim;
-    let mut out = vec![0.0f32; xf.len()];
     let mut stats = Vec::with_capacity(rows);
     for r in 0..rows {
         let seg = &xf[r * dim..(r + 1) * dim];
         let mean = seg.iter().sum::<f32>() / dim as f32;
         let var = seg.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / dim as f32;
-        let inv = 1.0 / (var + EPS).sqrt();
+        stats.push((mean, 1.0 / (var + EPS).sqrt()));
+    }
+    stats
+}
+
+fn layernorm_fwd(x: &Tensor, gamma: &Tensor, beta: &Tensor, dim: usize) -> Tensor {
+    let xf = x.f();
+    let gf = gamma.f();
+    let bf = beta.f();
+    let stats = layernorm_stats(xf, dim);
+    let mut out = vec![0.0f32; xf.len()];
+    for (r, &(mean, inv)) in stats.iter().enumerate() {
+        let seg = &xf[r * dim..(r + 1) * dim];
         for j in 0..dim {
             out[r * dim + j] = gf[j] * (seg[j] - mean) * inv + bf[j];
         }
-        stats.push((mean, inv));
     }
-    (Tensor::from_vec(x.shape(), out), stats)
+    Tensor::from_vec(x.shape(), out)
 }
 
 fn layernorm_bwd(x: &Tensor, gamma: &Tensor, dy: &Tensor, dim: usize) -> Result<BackwardOut> {
-    let (_, stats) = layernorm_fwd(x, gamma, &Tensor::zeros(&[dim]), dim);
     let xf = x.f();
+    let stats = layernorm_stats(xf, dim);
     let gf = gamma.f();
     let dyf = dy.f();
     let rows = xf.len() / dim;

@@ -10,7 +10,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::OpKernel;
 use crate::dag::{Node, OpKind};
-use crate::exec::BackwardOut;
+use crate::exec::{BackwardOut, Scratch};
 use crate::tensor::Tensor;
 
 /// The one place the "host engine cannot run a StageCall" error is built.
@@ -32,7 +32,13 @@ impl OpKernel for StageCallKernel {
         "stage_call"
     }
 
-    fn forward(&self, node: &Node, _inputs: &[&Tensor], _params: &[Tensor]) -> Result<Tensor> {
+    fn forward(
+        &self,
+        node: &Node,
+        _inputs: &[&Tensor],
+        _params: &[Tensor],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         Err(stagecall_unsupported("RefEngine", stage_name(node)?))
     }
 
@@ -42,6 +48,7 @@ impl OpKernel for StageCallKernel {
         _inputs: &[&Tensor],
         _params: &[Tensor],
         _dy: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<BackwardOut> {
         Err(stagecall_unsupported("RefEngine", stage_name(node)?))
     }

@@ -21,11 +21,13 @@
 pub mod kernels;
 pub mod optim;
 pub mod ref_engine;
+pub mod scratch;
 pub mod xla_engine;
 
 pub use kernels::{kernel_for, OpKernel};
 pub use optim::{Adam, Optimizer, Sgd};
 pub use ref_engine::RefEngine;
+pub use scratch::Scratch;
 
 use crate::dag::Node;
 use crate::tensor::Tensor;

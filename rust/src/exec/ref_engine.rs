@@ -14,17 +14,27 @@ use anyhow::Result;
 
 use crate::dag::Node;
 use crate::exec::kernels::kernel_for;
-use crate::exec::{BackwardOut, Engine};
+use crate::exec::{BackwardOut, Engine, Scratch};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
-/// Pure-rust execution-plane backend.
+/// Pure-rust execution-plane backend. Owns the scratch pool its kernels
+/// draw temporaries from, so buffers are recycled across all forward and
+/// backward calls of a compnode's lifetime.
 #[derive(Debug, Default)]
-pub struct RefEngine;
+pub struct RefEngine {
+    scratch: Scratch,
+}
 
 impl RefEngine {
     pub fn new() -> RefEngine {
-        RefEngine
+        RefEngine { scratch: Scratch::new() }
+    }
+
+    /// Scratch-pool statistics (hits, misses) — observability for tests
+    /// and the profiler.
+    pub fn scratch_stats(&self) -> (u64, u64) {
+        (self.scratch.hits(), self.scratch.misses())
     }
 }
 
@@ -38,7 +48,7 @@ impl Engine for RefEngine {
     }
 
     fn forward(&mut self, node: &Node, inputs: &[&Tensor], params: &[Tensor]) -> Result<Tensor> {
-        kernel_for(&node.kind).forward(node, inputs, params)
+        kernel_for(&node.kind).forward(node, inputs, params, &mut self.scratch)
     }
 
     fn backward(
@@ -51,7 +61,7 @@ impl Engine for RefEngine {
         // Loss nodes may be seeded; everything else requires an upstream grad.
         let seeded = Tensor::scalar(1.0);
         let dy = out_grad.unwrap_or(&seeded);
-        kernel_for(&node.kind).vjp(node, inputs, params, dy)
+        kernel_for(&node.kind).vjp(node, inputs, params, dy, &mut self.scratch)
     }
 }
 
@@ -102,6 +112,38 @@ mod tests {
         let b1 = eng.backward(&g.node(h).clone(), &[&xs], &p1, Some(dh)).unwrap();
         assert_eq!(b1.param_grads.len(), 2);
         assert_eq!(b1.param_grads[0].shape(), &[6, 5]);
+    }
+
+    /// The engine's pooled scratch buffers must be invisible in the
+    /// numerics: repeating a forward through the same engine reuses
+    /// buffers (hits > 0) yet reproduces the output bitwise.
+    #[test]
+    fn scratch_pool_reuse_is_bitwise_invisible() {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 4, 8]), DType::F32);
+        let f = g.op("ffn", OpKind::FeedForward { dim: 8, hidden: 16 }, &[x]).unwrap();
+        let node = g.node(f).clone();
+        let mut eng = RefEngine::new();
+        let mut rng = Rng::new(21);
+        let params = eng.init_params(&node, &mut rng).unwrap();
+        let xs = Tensor::randn(&[2, 4, 8], 1.0, &mut rng);
+        let y1 = eng.forward(&node, &[&xs], &params).unwrap();
+        let b1 = eng.backward(&node, &[&xs], &params, Some(&y1)).unwrap();
+        let (_, misses_after_first) = eng.scratch_stats();
+        assert!(misses_after_first > 0);
+        let y2 = eng.forward(&node, &[&xs], &params).unwrap();
+        let b2 = eng.backward(&node, &[&xs], &params, Some(&y2)).unwrap();
+        let (hits, _) = eng.scratch_stats();
+        assert!(hits > 0, "second pass must be served from the pool");
+        let bits = |t: &Tensor| t.f().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&y1), bits(&y2));
+        assert_eq!(
+            bits(b1.input_grads[0].as_ref().unwrap()),
+            bits(b2.input_grads[0].as_ref().unwrap())
+        );
+        for (p1, p2) in b1.param_grads.iter().zip(&b2.param_grads) {
+            assert_eq!(bits(p1), bits(p2));
+        }
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! Size-bucketed scratch-buffer pool for kernel temporaries.
+//!
+//! Per-step kernel temporaries (attention score matrices, FFN hidden
+//! activations, im2col patch buffers, softmax probabilities) used to be
+//! freshly allocated `Vec<f32>`s on every forward/vjp call. A [`Scratch`]
+//! pool owned by the engine recycles them across calls: kernels `take` a
+//! buffer of the length they need and `put` it back before returning.
+//!
+//! Determinism contract (DESIGN.md §Perf): `take` always returns a
+//! **zero-filled** buffer of exactly the requested length, so a recycled
+//! buffer is indistinguishable from `vec![0.0; len]` and pool reuse can
+//! never change numerics. Buffers that escape a kernel as output tensors
+//! must NOT come from the pool — only intra-call temporaries do.
+
+use std::collections::BTreeMap;
+
+/// Keep at most this many f32s parked in the pool (16 MiB). Oversized
+/// returns are dropped instead of parked so one huge conv doesn't pin
+/// memory for the rest of training.
+const DEFAULT_CAP_FLOATS: usize = 4 << 20;
+
+/// A size-bucketed pool of reusable `Vec<f32>` temporaries.
+#[derive(Debug)]
+pub struct Scratch {
+    /// Free buffers keyed by capacity; each bucket is a LIFO stack.
+    free: BTreeMap<usize, Vec<Vec<f32>>>,
+    /// Total f32 capacity currently parked in `free`.
+    held: usize,
+    /// Park limit in f32s.
+    cap: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { free: BTreeMap::new(), held: 0, cap: DEFAULT_CAP_FLOATS, hits: 0, misses: 0 }
+    }
+
+    /// Pool with a custom park limit (tests).
+    pub fn with_capacity_limit(cap_floats: usize) -> Scratch {
+        Scratch { cap: cap_floats, ..Scratch::new() }
+    }
+
+    /// Take a zero-filled buffer of exactly `len` elements, reusing the
+    /// smallest parked buffer whose capacity fits.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        // Smallest-fit: first bucket at or above len.
+        let bucket = self.free.range(len..).next().map(|(&cap, _)| cap);
+        if let Some(cap) = bucket {
+            let stack = self.free.get_mut(&cap).expect("bucket exists");
+            let mut buf = stack.pop().expect("non-empty bucket");
+            if stack.is_empty() {
+                self.free.remove(&cap);
+            }
+            self.held -= buf.capacity();
+            self.hits += 1;
+            buf.clear();
+            buf.resize(len, 0.0);
+            buf
+        } else {
+            self.misses += 1;
+            // Round up so nearby sizes land in the same bucket on return.
+            let cap = len.next_power_of_two().max(1);
+            let mut buf = Vec::with_capacity(cap);
+            buf.resize(len, 0.0);
+            buf
+        }
+    }
+
+    /// Return a buffer to the pool. Dropped (not parked) if parking it
+    /// would exceed the capacity limit.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        let cap = buf.capacity();
+        if cap == 0 || self.held + cap > self.cap {
+            return;
+        }
+        self.held += cap;
+        self.free.entry(cap).or_default().push(buf);
+    }
+
+    /// Pool hits since construction (take satisfied from a parked buffer).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Pool misses since construction (take had to allocate).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Total f32 capacity currently parked.
+    pub fn held_floats(&self) -> usize {
+        self.held
+    }
+
+    /// Drop all parked buffers (stats are kept).
+    pub fn clear(&mut self) {
+        self.free.clear();
+        self.held = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_after_reuse() {
+        let mut s = Scratch::new();
+        let mut a = s.take(100);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        s.put(a);
+        let b = s.take(64);
+        assert_eq!(b.len(), 64);
+        assert!(b.iter().all(|&x| x == 0.0), "recycled buffer must be zeroed");
+        assert_eq!(s.hits(), 1);
+        assert_eq!(s.misses(), 1);
+    }
+
+    #[test]
+    fn smallest_fit_bucket_is_chosen() {
+        let mut s = Scratch::new();
+        let small = s.take(10); // cap 16
+        let big = s.take(1000); // cap 1024
+        s.put(big);
+        s.put(small);
+        let got = s.take(12);
+        assert_eq!(got.capacity(), 16, "should reuse the 16-cap buffer, not the 1024");
+        assert_eq!(s.hits(), 1);
+    }
+
+    #[test]
+    fn capacity_limit_drops_oversized_returns() {
+        let mut s = Scratch::with_capacity_limit(100);
+        let buf = s.take(1000);
+        s.put(buf);
+        assert_eq!(s.held_floats(), 0, "over-limit buffer must be dropped");
+        let small = s.take(10);
+        s.put(small);
+        assert!(s.held_floats() > 0);
+        s.clear();
+        assert_eq!(s.held_floats(), 0);
+    }
+
+    #[test]
+    fn zero_len_take_works() {
+        let mut s = Scratch::new();
+        let b = s.take(0);
+        assert!(b.is_empty());
+        s.put(b);
+    }
+}

@@ -21,7 +21,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::dag::{Node, OpKind};
-use crate::exec::{kernels, BackwardOut, Engine};
+use crate::exec::{kernels, BackwardOut, Engine, Scratch};
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -51,6 +51,8 @@ pub fn stage_kind(stage: &str) -> Result<StageKind> {
 pub struct XlaEngine {
     runtime: Runtime,
     manifest: Manifest,
+    /// Temporaries pool for the host-kernel fallback path.
+    scratch: Scratch,
 }
 
 impl XlaEngine {
@@ -59,7 +61,7 @@ impl XlaEngine {
     pub fn load(dir: &std::path::Path) -> Result<XlaEngine> {
         let mut runtime = Runtime::cpu()?;
         let manifest = runtime.load_dir(dir)?;
-        Ok(XlaEngine { runtime, manifest })
+        Ok(XlaEngine { runtime, manifest, scratch: Scratch::new() })
     }
 
     /// Load only the artifacts belonging to `stage` (what a compnode hosting
@@ -68,7 +70,7 @@ impl XlaEngine {
         let mut runtime = Runtime::cpu()?;
         let prefix = format!("{stage}_");
         let manifest = runtime.load_dir_filtered(dir, |name| name.starts_with(&prefix))?;
-        Ok(XlaEngine { runtime, manifest })
+        Ok(XlaEngine { runtime, manifest, scratch: Scratch::new() })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -329,7 +331,7 @@ impl Engine for XlaEngine {
             OpKind::StageCall { stage, .. } => self.stage_forward(stage, params, inputs),
             // Non-StageCall ops are not compiled into artifacts; run them on
             // the shared host kernels instead of refusing outright.
-            other => kernels::kernel_for(other).forward(node, inputs, params),
+            other => kernels::kernel_for(other).forward(node, inputs, params, &mut self.scratch),
         }
     }
 
@@ -354,7 +356,7 @@ impl Engine for XlaEngine {
             other => {
                 let seeded = Tensor::scalar(1.0);
                 let dy = out_grad.unwrap_or(&seeded);
-                kernels::kernel_for(other).vjp(node, inputs, params, dy)
+                kernels::kernel_for(other).vjp(node, inputs, params, dy, &mut self.scratch)
             }
         }
     }

@@ -6,6 +6,15 @@
 //! on any backend; `RefEngine` is the backend that needs no artifacts and
 //! runs anywhere, used by the simulator, the quickstart example and as the
 //! numerics oracle opposite the XLA engine in cross-engine tests.
+//!
+//! The three GEMMs (`matmul_into`, `matmul_bt_into`, `matmul_at_into`) are
+//! register-tiled and panel-packed (DESIGN.md §Perf), with an opt-in
+//! row-partitioned thread fan-out. Every variant accumulates each output
+//! element as a single chain over ascending `k`, so blocked, threaded and
+//! [`naive`] results are **bitwise identical** — the determinism contract
+//! `tests/golden_training.rs` relies on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::dag::Shape;
 
@@ -113,8 +122,8 @@ impl Tensor {
     /// In-place `self += alpha * other`.
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
-        let b = other.f().to_vec();
-        for (x, y) in self.f_mut().iter_mut().zip(b) {
+        let b = other.f();
+        for (x, &y) in self.f_mut().iter_mut().zip(b) {
             *x += alpha * y;
         }
     }
@@ -130,74 +139,439 @@ impl Tensor {
     }
 }
 
-/// `C[m,n] = A[m,k] · B[k,n]` — blocked ikj loop, the RefEngine matmul.
+// ---------------------------------------------------------------------------
+// GEMM threading configuration
+// ---------------------------------------------------------------------------
+
+/// 0 = unresolved; resolved lazily from `FUSIONAI_GEMM_THREADS` (default 1).
+static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Below this many FLOPs (2·m·k·n) a GEMM always runs single-threaded:
+/// thread spawn/join overhead dominates small problems.
+const GEMM_PAR_MIN_FLOPS: usize = 1 << 21;
+
+/// Set the process-wide GEMM fan-out (1 = single-threaded, the default).
+pub fn set_gemm_threads(threads: usize) {
+    GEMM_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// Current GEMM fan-out; first call resolves `FUSIONAI_GEMM_THREADS`.
+pub fn gemm_threads() -> usize {
+    match GEMM_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let n = std::env::var("FUSIONAI_GEMM_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or(1);
+            GEMM_THREADS.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+/// Threads to use for one GEMM of the given extent (FLOP-thresholded).
+fn plan_threads(m: usize, k: usize, n: usize) -> usize {
+    let t = gemm_threads();
+    if t <= 1 {
+        return 1;
+    }
+    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+    if flops < GEMM_PAR_MIN_FLOPS {
+        1
+    } else {
+        t.min(m).max(1)
+    }
+}
+
+/// Fan `m` output rows out over `threads` contiguous chunks of `c`.
+/// `body(i0, chunk)` computes rows `i0..i0+chunk.len()/n`. Each output
+/// element is produced by exactly one chunk with the same per-element
+/// arithmetic as the single-threaded path, so results are bitwise
+/// independent of the thread count.
+fn par_rows(
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    threads: usize,
+    body: &(dyn Fn(usize, &mut [f32]) + Sync),
+) {
+    let t = threads.min(m).max(1);
+    if t <= 1 {
+        body(0, c);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = c;
+        let mut i0 = 0;
+        while i0 < m {
+            let take = rows_per.min(m - i0);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            rest = tail;
+            s.spawn(move || body(i0, chunk));
+            i0 += take;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Blocked GEMM kernels
+// ---------------------------------------------------------------------------
+
+/// Register-tile height (output rows per micro-kernel).
+const MR: usize = 4;
+/// Register-tile width (output columns per micro-kernel).
+const NR: usize = 16;
+
+/// `C[m,n] = A[m,k] · B[k,n]` — allocating wrapper over [`matmul_into`].
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; m * n];
     matmul_into(a, b, &mut c, m, k, n);
     c
 }
 
-/// Matmul into an existing buffer (hot-path variant; avoids allocation).
+/// Blocked matmul into an existing buffer (hot-path variant).
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_into_threaded(a, b, c, m, k, n, plan_threads(m, k, n));
+}
+
+/// [`matmul_into`] with an explicit thread count (benches/property tests).
+pub fn matmul_into_threaded(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    // ikj order: streams B and C rows, good cache behaviour without tiling.
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+    if n == 0 {
+        return;
+    }
+    par_rows(c, m, n, threads, &|i0, chunk| {
+        let rows = chunk.len() / n;
+        gemm_block(&a[i0 * k..(i0 + rows) * k], b, chunk, k, n);
+    });
+}
+
+/// Micro-kernel driver for a contiguous block of A/C rows: MR×NR register
+/// tiles over a packed A panel, each `acc` element a single ascending-k
+/// chain (the bitwise-determinism invariant).
+fn gemm_block(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize) {
+    let rows = if k == 0 { c.len() / n } else { a.len() / k };
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    // Packed MR×k panel of A, interleaved so the micro-kernel reads MR
+    // contiguous values per k-step: pack[kk*MR + r] = a[(i+r)*k + kk].
+    let mut pack = vec![0.0f32; MR * k];
+    let mut i = 0;
+    while i + MR <= rows {
+        for r in 0..MR {
+            let arow = &a[(i + r) * k..][..k];
+            for (kk, &v) in arow.iter().enumerate() {
+                pack[kk * MR + r] = v;
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+        }
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MR];
+            for kk in 0..k {
+                let ap = &pack[kk * MR..][..MR];
+                let bp = &b[kk * n + j..][..NR];
+                for r in 0..MR {
+                    let av = ap[r];
+                    for (x, &bv) in acc[r].iter_mut().zip(bp) {
+                        *x += av * bv;
+                    }
+                }
             }
+            for (r, accr) in acc.iter().enumerate() {
+                c[(i + r) * n + j..][..NR].copy_from_slice(accr);
+            }
+            j += NR;
+        }
+        for jj in j..n {
+            for r in 0..MR {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += pack[kk * MR + r] * b[kk * n + jj];
+                }
+                c[(i + r) * n + jj] = s;
+            }
+        }
+        i += MR;
+    }
+    for r in i..rows {
+        let arow = &a[r * k..][..k];
+        for jj in 0..n {
+            let mut s = 0.0f32;
+            for (kk, &av) in arow.iter().enumerate() {
+                s += av * b[kk * n + jj];
+            }
+            c[r * n + jj] = s;
         }
     }
 }
 
-/// `C[m,n] = A[m,k] · Bᵀ[n,k]`.
+/// `C[m,n] = A[m,k] · Bᵀ[n,k]` — allocating wrapper over
+/// [`matmul_bt_into`].
 pub fn matmul_bt(a: &[f32], b_t: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_bt_into(a, b_t, &mut c, m, k, n);
+    c
+}
+
+/// Blocked `A · Bᵀ` into an existing buffer.
+pub fn matmul_bt_into(a: &[f32], b_t: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_bt_into_threaded(a, b_t, c, m, k, n, plan_threads(m, k, n));
+}
+
+/// [`matmul_bt_into`] with an explicit thread count.
+pub fn matmul_bt_into_threaded(
+    a: &[f32],
+    b_t: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b_t.len(), n * k);
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b_t[j * k..(j + 1) * k];
-            let mut s = 0.0;
+    assert_eq!(c.len(), m * n);
+    if n == 0 {
+        return;
+    }
+    par_rows(c, m, n, threads, &|i0, chunk| {
+        let rows = chunk.len() / n;
+        gemm_bt_block(&a[i0 * k..(i0 + rows) * k], b_t, chunk, k, n);
+    });
+}
+
+/// 4×4 dot-product register tile: both operands stream contiguously along
+/// k; 16 independent accumulator chains give the ILP the single-chain
+/// naive loop lacks, while each chain stays ascending-k (bitwise match).
+fn gemm_bt_block(a: &[f32], b_t: &[f32], c: &mut [f32], k: usize, n: usize) {
+    let rows = if k == 0 { c.len() / n } else { a.len() / k };
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    const TR: usize = 4;
+    let mut i = 0;
+    while i + TR <= rows {
+        let a0 = &a[i * k..][..k];
+        let a1 = &a[(i + 1) * k..][..k];
+        let a2 = &a[(i + 2) * k..][..k];
+        let a3 = &a[(i + 3) * k..][..k];
+        let mut j = 0;
+        while j + TR <= n {
+            let b0 = &b_t[j * k..][..k];
+            let b1 = &b_t[(j + 1) * k..][..k];
+            let b2 = &b_t[(j + 2) * k..][..k];
+            let b3 = &b_t[(j + 3) * k..][..k];
+            let mut acc = [[0.0f32; TR]; TR];
+            for kk in 0..k {
+                let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                let bv = [b0[kk], b1[kk], b2[kk], b3[kk]];
+                for (accr, &ar) in acc.iter_mut().zip(&av) {
+                    for (x, &bc) in accr.iter_mut().zip(&bv) {
+                        *x += ar * bc;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                c[(i + r) * n + j..][..TR].copy_from_slice(accr);
+            }
+            j += TR;
+        }
+        for jj in j..n {
+            let brow = &b_t[jj * k..][..k];
+            for (r, arow) in [a0, a1, a2, a3].iter().enumerate() {
+                let mut s = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                c[(i + r) * n + jj] = s;
+            }
+        }
+        i += TR;
+    }
+    for r in i..rows {
+        let arow = &a[r * k..][..k];
+        for jj in 0..n {
+            let brow = &b_t[jj * k..][..k];
+            let mut s = 0.0f32;
             for (x, y) in arow.iter().zip(brow) {
                 s += x * y;
             }
-            c[i * n + j] = s;
+            c[r * n + jj] = s;
         }
     }
+}
+
+/// `C[m,n] = Aᵀ[k,m] · B[k,n]` (weight gradients) — allocating wrapper
+/// over [`matmul_at_into`].
+pub fn matmul_at(a_t: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_at_into(a_t, b, &mut c, m, k, n);
     c
 }
 
-/// `C[m,n] = Aᵀ[k,m] · B[k,n]` (for weight gradients).
-pub fn matmul_at(a_t: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Blocked `Aᵀ · B` into an existing buffer.
+pub fn matmul_at_into(a_t: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_at_into_threaded(a_t, b, c, m, k, n, plan_threads(m, k, n));
+}
+
+/// [`matmul_at_into`] with an explicit thread count.
+pub fn matmul_at_into_threaded(
+    a_t: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
     assert_eq!(a_t.len(), k * m);
     assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * n];
-    for kk in 0..k {
-        let arow = &a_t[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
+    assert_eq!(c.len(), m * n);
+    if n == 0 {
+        return;
+    }
+    par_rows(c, m, n, threads, &|i0, chunk| {
+        gemm_at_block(a_t, b, chunk, i0, m, k, n);
+    });
+}
+
+/// MR×NR register tile over `Aᵀ·B`: per k-step the tile reads MR
+/// contiguous A-transpose values and NR contiguous B values. `i0` is the
+/// first global output row of this chunk (A columns are addressed
+/// globally when the work is row-partitioned across threads).
+fn gemm_at_block(
+    a_t: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let rows = c.len() / n;
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let mut i = 0;
+    while i + MR <= rows {
+        let gi = i0 + i;
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MR];
+            for kk in 0..k {
+                let ap = &a_t[kk * m + gi..][..MR];
+                let bp = &b[kk * n + j..][..NR];
+                for r in 0..MR {
+                    let av = ap[r];
+                    for (x, &bv) in acc[r].iter_mut().zip(bp) {
+                        *x += av * bv;
+                    }
+                }
             }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+            for (r, accr) in acc.iter().enumerate() {
+                c[(i + r) * n + j..][..NR].copy_from_slice(accr);
+            }
+            j += NR;
+        }
+        for jj in j..n {
+            for r in 0..MR {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a_t[kk * m + gi + r] * b[kk * n + jj];
+                }
+                c[(i + r) * n + jj] = s;
             }
         }
+        i += MR;
     }
-    c
+    for r in i..rows {
+        let gi = i0 + r;
+        for jj in 0..n {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += a_t[kk * m + gi] * b[kk * n + jj];
+            }
+            c[r * n + jj] = s;
+        }
+    }
+}
+
+/// Reference GEMMs: the pre-optimization loops, minus the data-dependent
+/// `if av == 0.0` skips (the skips broke bitwise equality on signed
+/// zeros and non-finite values and defeated autovectorization). Property
+/// tests assert the blocked/threaded kernels match these **bitwise**.
+pub mod naive {
+    /// `C[m,n] = A[m,k] · B[k,n]`, ikj order.
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// `C[m,n] = A[m,k] · Bᵀ[n,k]`, row-by-row dot products.
+    pub fn matmul_bt(a: &[f32], b_t: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b_t.len(), n * k);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b_t[j * k..(j + 1) * k];
+                let mut s = 0.0;
+                for (x, y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    /// `C[m,n] = Aᵀ[k,m] · B[k,n]`, kij order.
+    pub fn matmul_at(a_t: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a_t.len(), k * m);
+        assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = &a_t[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        c
+    }
 }
 
 /// Numerically stable softmax over the last axis, in place.
@@ -280,6 +654,100 @@ mod tests {
         for (x, y) in c.iter().zip(&c3) {
             assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    /// The central determinism contract: blocked kernels equal the naive
+    /// reference bitwise on shapes that exercise every tile-remainder
+    /// combination (rows % MR, cols % NR and % 4, tiny k, k > NR).
+    #[test]
+    fn blocked_matches_naive_bitwise_across_remainders() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (4, 16, 16),
+            (5, 3, 17),
+            (7, 33, 19),
+            (8, 64, 16),
+            (9, 7, 31),
+            (16, 40, 33),
+            (3, 64, 5),
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let want = naive::matmul(&a, &b, m, k, n);
+            let got = matmul(&a, &b, m, k, n);
+            assert_eq!(bits(&want), bits(&got), "matmul {m}x{k}x{n}");
+
+            let bt: Vec<f32> = transpose(&b, k, n);
+            let want = naive::matmul_bt(&a, &bt, m, k, n);
+            let got = matmul_bt(&a, &bt, m, k, n);
+            assert_eq!(bits(&want), bits(&got), "matmul_bt {m}x{k}x{n}");
+
+            let at: Vec<f32> = transpose(&a, m, k);
+            let want = naive::matmul_at(&at, &b, m, k, n);
+            let got = matmul_at(&at, &b, m, k, n);
+            assert_eq!(bits(&want), bits(&got), "matmul_at {m}x{k}x{n}");
+        }
+    }
+
+    /// Thread-count invariance: the row partition never changes any output
+    /// element's arithmetic, so 1..=4 threads are bitwise identical.
+    #[test]
+    fn threaded_matches_single_thread_bitwise() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (23, 37, 29);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bt = transpose(&b, k, n);
+        let at = transpose(&a, m, k);
+        let mut base = vec![0.0f32; m * n];
+        matmul_into_threaded(&a, &b, &mut base, m, k, n, 1);
+        let mut base_bt = vec![0.0f32; m * n];
+        matmul_bt_into_threaded(&a, &bt, &mut base_bt, m, k, n, 1);
+        let mut base_at = vec![0.0f32; m * n];
+        matmul_at_into_threaded(&at, &b, &mut base_at, m, k, n, 1);
+        for threads in 2..=4 {
+            let mut c = vec![0.0f32; m * n];
+            matmul_into_threaded(&a, &b, &mut c, m, k, n, threads);
+            assert_eq!(bits(&base), bits(&c), "matmul threads={threads}");
+            let mut c = vec![0.0f32; m * n];
+            matmul_bt_into_threaded(&a, &bt, &mut c, m, k, n, threads);
+            assert_eq!(bits(&base_bt), bits(&c), "matmul_bt threads={threads}");
+            let mut c = vec![0.0f32; m * n];
+            matmul_at_into_threaded(&at, &b, &mut c, m, k, n, threads);
+            assert_eq!(bits(&base_at), bits(&c), "matmul_at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn degenerate_gemm_extents() {
+        // k = 0 must produce zeros, not stale data.
+        let mut c = vec![9.0f32; 6];
+        matmul_into(&[], &[], &mut c, 2, 0, 3);
+        assert_eq!(c, vec![0.0; 6]);
+        let mut c = vec![9.0f32; 6];
+        matmul_bt_into(&[], &[], &mut c, 2, 0, 3);
+        assert_eq!(c, vec![0.0; 6]);
+        let mut c = vec![9.0f32; 6];
+        matmul_at_into(&[], &[], &mut c, 2, 0, 3);
+        assert_eq!(c, vec![0.0; 6]);
+        // n = 0 / m = 0 are no-ops.
+        matmul_into(&[1.0, 2.0], &[], &mut [], 1, 2, 0);
+        matmul_into(&[], &[1.0, 2.0], &mut [], 0, 1, 2);
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn transpose(v: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut t = vec![0.0f32; v.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = v[r * cols + c];
+            }
+        }
+        t
     }
 
     #[test]

@@ -75,6 +75,33 @@ fn passmanager_processed_graph_trains_bitwise_identically() {
 }
 
 #[test]
+fn threaded_gemm_trains_bitwise_identically() {
+    // The row-partitioned threaded GEMM must be invisible in the numerics:
+    // each output element is still a single ascending-k accumulation chain,
+    // so a 4-thread run reproduces the single-thread losses bit for bit.
+    // (The scratch pool is always on — RefEngine owns one — so this also
+    // pins down that pooled-buffer reuse does not perturb training.)
+    let cfg = TransformerConfig::tiny();
+
+    fusionai::tensor::set_gemm_threads(1);
+    let single = train_losses(&cfg, cfg.build_graph());
+
+    fusionai::tensor::set_gemm_threads(4);
+    let threaded = train_losses(&cfg, cfg.build_graph());
+    fusionai::tensor::set_gemm_threads(1);
+
+    assert_eq!(single.len(), threaded.len());
+    for (step, (a, b)) in single.iter().zip(&threaded).enumerate() {
+        assert!(a.is_finite());
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "step {step}: single-thread loss {a} != threaded loss {b}"
+        );
+    }
+}
+
+#[test]
 fn serde_roundtripped_graph_trains_bitwise_identically() {
     // from_json(to_json(g)) must also preserve training numerics exactly —
     // the round-trip keeps ids, kwargs, shapes and dtypes intact.

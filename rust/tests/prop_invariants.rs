@@ -441,6 +441,65 @@ fn prop_kernel_vjp_agrees_with_finite_differences() {
 }
 
 #[test]
+fn prop_blocked_and_threaded_gemm_match_naive_bitwise() {
+    // The blocked/packed GEMMs and their row-partitioned threaded variants
+    // must be *bitwise* equal to the retained naive loops: every output
+    // element is one ascending-k accumulation chain in every code path
+    // (DESIGN.md §Perf determinism contract). Shapes deliberately straddle
+    // the MR=4 / NR=16 tile boundaries and push k past the packing panel.
+    use fusionai::tensor::{
+        matmul, matmul_at, matmul_at_into_threaded, matmul_bt, matmul_bt_into_threaded,
+        matmul_into_threaded, naive,
+    };
+    check("gemm-bitwise", 60, |g| {
+        let m = g.usize(1, 10);
+        let n = g.usize(1, 48);
+        let k = g.usize(1, 520);
+        let a = g.vec_f32(m * k, 1.0);
+        let b = g.vec_f32(k * n, 1.0);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+        // C = A·B
+        let want = naive::matmul(&a, &b, m, k, n);
+        let got = matmul(&a, &b, m, k, n);
+        if bits(&want) != bits(&got) {
+            return Err(format!("blocked matmul != naive at m={m} k={k} n={n}"));
+        }
+        let threads = g.usize(1, 5);
+        let mut c = vec![0.0f32; m * n];
+        matmul_into_threaded(&a, &b, &mut c, m, k, n, threads);
+        if bits(&want) != bits(&c) {
+            return Err(format!("threaded({threads}) matmul != naive at m={m} k={k} n={n}"));
+        }
+
+        // C = A·Bᵀ  (b_t is [n, k])
+        let b_t = g.vec_f32(n * k, 1.0);
+        let want = naive::matmul_bt(&a, &b_t, m, k, n);
+        let got = matmul_bt(&a, &b_t, m, k, n);
+        if bits(&want) != bits(&got) {
+            return Err(format!("blocked matmul_bt != naive at m={m} k={k} n={n}"));
+        }
+        matmul_bt_into_threaded(&a, &b_t, &mut c, m, k, n, threads);
+        if bits(&want) != bits(&c) {
+            return Err(format!("threaded({threads}) matmul_bt != naive at m={m} k={k} n={n}"));
+        }
+
+        // C = Aᵀ·B  (a_t is [k, m])
+        let a_t = g.vec_f32(k * m, 1.0);
+        let want = naive::matmul_at(&a_t, &b, m, k, n);
+        let got = matmul_at(&a_t, &b, m, k, n);
+        if bits(&want) != bits(&got) {
+            return Err(format!("blocked matmul_at != naive at m={m} k={k} n={n}"));
+        }
+        matmul_at_into_threaded(&a_t, &b, &mut c, m, k, n, threads);
+        if bits(&want) != bits(&c) {
+            return Err(format!("threaded({threads}) matmul_at != naive at m={m} k={k} n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_graph_shape_inference_total() {
     // Arbitrary small op chains never produce inconsistent shapes.
     check("shape-inference", 120, |g| {

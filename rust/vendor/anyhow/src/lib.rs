@@ -1,0 +1,186 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements the subset of the real API this workspace uses: [`Error`]
+//! with a context chain, [`Result`] with a defaulted error type, the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Display follows anyhow's convention: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain separated by `: `, and `{:?}`
+//! prints the message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain from the outermost message inward.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut src = self.source.as_deref();
+            while let Some(e) = src {
+                write!(f, ": {}", e.msg)?;
+                src = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut src = self.source.as_deref();
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = src {
+            write!(f, "\n    {}", e.msg)?;
+            src = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Mirrors anyhow's blanket conversion. Coherent because this `Error` does
+// not itself implement `std::error::Error`, so the impl can never overlap
+// with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut built: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            built = Some(Error { msg, source: built.map(Box::new) });
+        }
+        built.expect("at least one message")
+    }
+}
+
+/// `anyhow::Result<T>` — the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let err = fails_io().context("reading config").unwrap_err();
+        assert_eq!(err.to_string(), "reading config");
+        assert_eq!(format!("{err:#}"), "reading config: no such file");
+        assert_eq!(err.root_cause(), "no such file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let v = 3;
+        let e = anyhow!("value {v} bad");
+        assert_eq!(e.to_string(), "value 3 bad");
+        fn inner() -> Result<()> {
+            bail!("boom {}", 7)
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "boom 7");
+        fn checked(ok: bool) -> Result<u32> {
+            ensure!(ok, "must hold");
+            Ok(1)
+        }
+        assert!(checked(true).is_ok());
+        assert_eq!(checked(false).unwrap_err().to_string(), "must hold");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, std::num::ParseIntError> = "42".parse();
+        let got = ok.with_context(|| -> String { unreachable!("not called on Ok") });
+        assert_eq!(got.unwrap(), 42);
+    }
+}

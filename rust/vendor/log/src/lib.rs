@@ -1,0 +1,51 @@
+//! Minimal offline stand-in for the `log` crate.
+//!
+//! Provides the five level macros. Records go to stderr only when the
+//! `FUSIONAI_LOG` environment variable is set, mirroring how the real crate
+//! is silent until a logger is installed.
+
+/// Backing emitter for the level macros (public so the macros can expand
+/// from downstream crates; not part of the real `log` API).
+pub fn __emit(level: &str, args: std::fmt::Arguments<'_>) {
+    if std::env::var_os("FUSIONAI_LOG").is_some() {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", ::std::format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_without_env() {
+        // Silent by default; just exercise the expansion paths.
+        info!("step {}: loss {:.4}", 1, 0.25_f32);
+        warn!("w");
+        error!("e");
+        debug!("d");
+        trace!("t");
+    }
+}

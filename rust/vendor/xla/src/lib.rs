@@ -1,0 +1,276 @@
+//! Minimal offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The host-side pieces — [`Literal`], [`ArrayShape`], [`ElementType`] —
+//! are real, so literal round-trips and manifest-driven code work without
+//! any native library. Everything that needs a live PJRT runtime
+//! ([`PjRtClient::cpu`] and downstream compile/execute calls) returns an
+//! error instead; callers are expected to surface or skip on it.
+
+use std::fmt;
+
+/// Stub-level XLA error.
+#[derive(Debug)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError {
+        msg: format!(
+            "{what}: PJRT runtime unavailable (offline `xla` stub; link the real xla crate to execute artifacts)"
+        ),
+    }
+}
+
+fn err(msg: String) -> XlaError {
+    XlaError { msg }
+}
+
+/// Element types the workspace exchanges with artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Shape of an array literal: dimensions plus element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Conversion between rust scalar types and [`Literal`] storage.
+pub trait NativeType: Copy {
+    fn vec1(data: &[Self]) -> Literal;
+    fn to_vec(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn vec1(data: &[Self]) -> Literal {
+        Literal::F32 { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    fn to_vec(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(err(format!("literal is not f32: {:?}", other.element_kind()))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn vec1(data: &[Self]) -> Literal {
+        Literal::S32 { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    fn to_vec(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::S32 { data, .. } => Ok(data.clone()),
+            other => Err(err(format!("literal is not s32: {:?}", other.element_kind()))),
+        }
+    }
+}
+
+/// A host-side literal: dense array data plus shape, or a tuple of
+/// literals (artifact results are 1-tuples of tuples).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { dims: Vec<i64>, data: Vec<f32> },
+    S32 { dims: Vec<i64>, data: Vec<i32> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::vec1(data)
+    }
+
+    fn element_kind(&self) -> &'static str {
+        match self {
+            Literal::F32 { .. } => "f32",
+            Literal::S32 { .. } => "s32",
+            Literal::Tuple(_) => "tuple",
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        match self {
+            Literal::F32 { data, .. } => {
+                if want as usize != data.len() {
+                    return Err(err(format!("reshape {} elements to {dims:?}", data.len())));
+                }
+                Ok(Literal::F32 { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::S32 { data, .. } => {
+                if want as usize != data.len() {
+                    return Err(err(format!("reshape {} elements to {dims:?}", data.len())));
+                }
+                Ok(Literal::S32 { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => Err(err("cannot reshape a tuple literal".to_string())),
+        }
+    }
+
+    /// Array shape of a non-tuple literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::F32 { dims, .. } => {
+                Ok(ArrayShape { dims: dims.clone(), ty: ElementType::F32 })
+            }
+            Literal::S32 { dims, .. } => {
+                Ok(ArrayShape { dims: dims.clone(), ty: ElementType::S32 })
+            }
+            Literal::Tuple(_) => Err(err("tuple literal has no array shape".to_string())),
+        }
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::to_vec(self)
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(items) => Ok(items),
+            other => Err(err(format!("literal is not a tuple: {}", other.element_kind()))),
+        }
+    }
+}
+
+/// Stub PJRT module proto: retains the HLO text it was parsed from.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text file. Parsing is deferred to compile time in the
+    /// real crate; the stub only validates that the file is readable.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Stub computation wrapper.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// Stub PJRT client: construction always fails in the offline stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Stub loaded executable (unreachable: the client never constructs one).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Stub device buffer (unreachable: the client never constructs one).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let items = t.to_tuple().unwrap();
+        assert_eq!(items.len(), 2);
+        assert!(Literal::vec1(&[0.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT runtime unavailable"));
+    }
+}
