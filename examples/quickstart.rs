@@ -80,11 +80,12 @@ fn main() -> anyhow::Result<()> {
         let r = cluster.train_step()?;
         if step % 5 == 0 || step == 19 {
             println!(
-                "  step {:>2}  loss {:.4}  comm {} ({} modelled)",
+                "  step {:>2}  loss {:.4}  comm {} ({} modelled)  peak resident {}",
                 step,
                 r.loss.unwrap(),
                 human_bytes(r.comm_bytes),
-                human_secs(r.comm_seconds)
+                human_secs(r.comm_seconds),
+                human_bytes(r.peak_resident_bytes)
             );
         }
     }

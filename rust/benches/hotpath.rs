@@ -17,9 +17,10 @@ use fusionai::benchutil::{bench, black_box, BenchResult};
 use fusionai::cluster::SimCluster;
 use fusionai::compress::Codec;
 use fusionai::dag::autodiff::backward_plan;
+use fusionai::dag::{DType, Graph, OpKind, Shape};
 use fusionai::decompose::Decomposition;
 use fusionai::dht::Dht;
-use fusionai::exec::{Adam, Engine, RefEngine};
+use fusionai::exec::{Adam, Engine, RefEngine, WaveRunner};
 use fusionai::models::transformer::TransformerConfig;
 use fusionai::net::{NetworkSim, Topology};
 use fusionai::perf::comm::LinkModel;
@@ -242,6 +243,38 @@ fn main() {
             .feed("labels", Tensor::from_ivec(&[cfg.batch, cfg.seq], labels.clone()))
             .unwrap();
         cluster.train_step().unwrap().updated
+    });
+    record(&mut records, r);
+
+    // --- wavefront executor: one wide wave of GEMM-heavy branches, serial
+    //     vs fanned out across threads (§Perf: graph-level wavefront case;
+    //     each branch is 2·64·128·128 FLOPs, at the fan-out threshold) ---
+    let mut wg = Graph::new();
+    let x = wg.placeholder("x", Shape::of(&[64, 128]), DType::F32);
+    let branches: Vec<_> = (0..8)
+        .map(|i| {
+            wg.op(
+                &format!("branch{i}"),
+                OpKind::Linear { in_features: 128, out_features: 128, bias: true },
+                &[x],
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut weng = RefEngine::new();
+    let mut wparams = std::collections::HashMap::new();
+    for &b in &branches {
+        wparams.insert(b, weng.init_params(wg.node(b), &mut rng).unwrap());
+    }
+    let mut wacts: Vec<Option<Tensor>> = (0..wg.len()).map(|_| None).collect();
+    wacts[x] = Some(Tensor::randn(&[64, 128], 1.0, &mut rng));
+    let mut runner = WaveRunner::new();
+    let r = bench("wavefront_wave8_linear_serial", wu(3), it(30), |_| {
+        runner.forward_wave(&wg, &branches, &wacts, &wparams, 1).unwrap().len()
+    });
+    record(&mut records, r);
+    let r = bench("wavefront_wave8_linear_threads4", wu(3), it(30), |_| {
+        runner.forward_wave(&wg, &branches, &wacts, &wparams, 4).unwrap().len()
     });
     record(&mut records, r);
 

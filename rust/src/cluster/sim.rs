@@ -35,6 +35,10 @@ pub struct StepReport {
     pub comm_bytes: u64,
     /// Parametric ops updated.
     pub updated: usize,
+    /// Largest per-compnode peak of resident activation+gradient bytes this
+    /// step (liveness-driven freeing keeps this far below the sum of all
+    /// activations; see `SubDagExecutor::set_liveness_freeing`).
+    pub peak_resident_bytes: u64,
 }
 
 /// The simulated cluster.
@@ -159,10 +163,13 @@ impl SimCluster {
             self.checkpoint_all();
         }
 
+        // Peaks survive end_batch; reset them so each report is per-step.
+        let peak_resident_bytes = self.peak_resident_bytes();
         for e in self.executors.iter_mut().flatten() {
             e.end_batch();
+            e.reset_peak_resident();
         }
-        Ok(StepReport { loss, comm_seconds, comm_bytes, updated })
+        Ok(StepReport { loss, comm_seconds, comm_bytes, updated, peak_resident_bytes })
     }
 
     /// Inference: FP only; returns the activation of `output_name`.
@@ -231,6 +238,37 @@ impl SimCluster {
 
     pub fn network(&self) -> &NetworkSim {
         &self.net
+    }
+
+    /// Largest per-compnode peak of resident activation+gradient bytes
+    /// since the peaks were last reset (i.e. this step).
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.executors
+            .iter()
+            .flatten()
+            .map(|e| e.peak_resident_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Toggle liveness-driven activation freeing on every live compnode
+    /// (off = keep-everything baseline for memory comparisons).
+    pub fn set_liveness_freeing(&mut self, on: bool) {
+        for e in self.executors.iter_mut().flatten() {
+            e.set_liveness_freeing(on);
+        }
+    }
+
+    /// Export execution gauges (per-compnode and cluster-wide peak resident
+    /// bytes) into a metrics registry.
+    pub fn observe_metrics(&self, m: &crate::metrics::Metrics) {
+        for e in self.executors.iter().flatten() {
+            m.set_max_gauge(
+                &format!("compnode.{}.peak_resident_bytes", e.sub_id),
+                e.peak_resident_bytes() as f64,
+            );
+        }
+        m.set_max_gauge("cluster.peak_resident_bytes", self.peak_resident_bytes() as f64);
     }
 }
 
@@ -368,6 +406,32 @@ mod tests {
         feed_fig3(&mut fresh, 7);
         let init_loss = fresh.train_step().unwrap().loss.unwrap();
         assert!(after < init_loss, "recovered loss {after} vs fresh {init_loss}");
+    }
+
+    #[test]
+    fn step_report_tracks_peak_resident_and_freeing_beats_baseline() {
+        let mut freeing = fig3_cluster(LinkModel::local());
+        feed_fig3(&mut freeing, 5);
+        let r1 = freeing.train_step().unwrap();
+        assert!(r1.peak_resident_bytes > 0);
+
+        let mut baseline = fig3_cluster(LinkModel::local());
+        baseline.set_liveness_freeing(false);
+        feed_fig3(&mut baseline, 5);
+        let r2 = baseline.train_step().unwrap();
+        assert!(
+            r1.peak_resident_bytes < r2.peak_resident_bytes,
+            "freeing {} must undercut keep-everything {}",
+            r1.peak_resident_bytes,
+            r2.peak_resident_bytes
+        );
+        // Identical numerics either way.
+        assert_eq!(r1.loss.unwrap().to_bits(), r2.loss.unwrap().to_bits());
+
+        // Gauges export as high-water marks.
+        let m = crate::metrics::Metrics::new();
+        baseline.observe_metrics(&m);
+        assert!(m.gauge("cluster.peak_resident_bytes").is_some());
     }
 
     #[test]

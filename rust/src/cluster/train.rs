@@ -159,40 +159,22 @@ impl PipelineTrainer {
 
         let net = Arc::new(NetworkSim::new(Topology::uniform(cfg.link), cfg.time_scale));
 
-        // Channels: act[i] feeds stage i+1; grad[i] feeds stage i.
-        let mut act_txs: Vec<Option<Sender<WireMsg>>> = Vec::new();
-        let mut act_rxs: Vec<Option<Receiver<WireMsg>>> = Vec::new();
-        let mut grad_txs: Vec<Option<Sender<WireMsg>>> = Vec::new();
-        let mut grad_rxs: Vec<Option<Receiver<WireMsg>>> = Vec::new();
-        act_rxs.push(None); // stage 0 has no upstream act
-        for _ in 0..n_stages - 1 {
+        // Channels, one slot per stage: stage i sends activations forward
+        // on act_txs[i] (received by i+1 on act_rxs[i+1]) and gradients
+        // backward on grad_txs[i] (received by i-1 on grad_rxs[i-1]). The
+        // pipeline ends leave the unused slots None.
+        let mut act_txs: Vec<Option<Sender<WireMsg>>> = (0..n_stages).map(|_| None).collect();
+        let mut act_rxs: Vec<Option<Receiver<WireMsg>>> = (0..n_stages).map(|_| None).collect();
+        let mut grad_txs: Vec<Option<Sender<WireMsg>>> = (0..n_stages).map(|_| None).collect();
+        let mut grad_rxs: Vec<Option<Receiver<WireMsg>>> = (0..n_stages).map(|_| None).collect();
+        for i in 0..n_stages - 1 {
             let (tx, rx) = channel::<WireMsg>();
-            act_txs.push(Some(tx));
-            act_rxs.push(Some(rx));
-        }
-        act_txs.push(None); // last stage sends no act
-        grad_rxs.push(None); // placeholder; re-filled below in reverse
-        let mut tmp_grad_rx: Vec<Option<Receiver<WireMsg>>> = vec![];
-        for _ in 0..n_stages - 1 {
+            act_txs[i] = Some(tx);
+            act_rxs[i + 1] = Some(rx);
             let (tx, rx) = channel::<WireMsg>();
-            grad_txs.push(Some(tx));
-            tmp_grad_rx.push(Some(rx));
+            grad_txs[i + 1] = Some(tx);
+            grad_rxs[i] = Some(rx);
         }
-        grad_txs.push(None); // stage 0's thread uses grad_rxs[0]... fix below
-        // grad channel i connects stage i+1 (sender) → stage i (receiver).
-        let mut grad_rx_per_stage: Vec<Option<Receiver<WireMsg>>> = Vec::new();
-        for _ in 0..n_stages {
-            grad_rx_per_stage.push(None);
-        }
-        for (i, rx) in tmp_grad_rx.into_iter().enumerate() {
-            grad_rx_per_stage[i] = rx;
-        }
-        let mut grad_tx_per_stage: Vec<Option<Sender<WireMsg>>> = Vec::new();
-        grad_tx_per_stage.push(None); // stage 0 sends no grads downstream
-        for tx in grad_txs.into_iter().take(n_stages - 1) {
-            grad_tx_per_stage.push(tx);
-        }
-        drop(grad_rxs);
 
         let (loss_tx, loss_rx) = channel::<(usize, f32)>();
         let (ckpt_tx, ckpt_rx) = channel::<(String, Vec<Tensor>)>();
@@ -210,8 +192,8 @@ impl PipelineTrainer {
             let seed = cfg.seed;
             let act_rx = act_rxs[si].take();
             let act_tx = act_txs[si].take();
-            let grad_rx = grad_rx_per_stage[si].take();
-            let grad_tx = grad_tx_per_stage[si].take();
+            let grad_rx = grad_rxs[si].take();
+            let grad_tx = grad_txs[si].take();
             let loss_tx = if si == n_stages - 1 { Some(loss_tx.clone()) } else { None };
             let ckpt_tx = ckpt_tx.clone();
             let is_first = si == 0;
@@ -354,29 +336,29 @@ fn stage_worker(ctx: StageCtx) -> Result<()> {
                 let input = if ctx.is_first {
                     fetch_tokens(&ctx.dht, step, mb, "tokens", &[ctx.batch, ctx.seq])?
                 } else {
-                    let msg = ctx
+                    let WireMsg { mb, tensor } = ctx
                         .act_rx
                         .as_ref()
                         .unwrap()
                         .recv()
                         .map_err(|_| anyhow!("upstream closed"))?;
-                    // use arrival mb index
-                    stash[msg.mb] = Some(msg.tensor.clone());
-                    let out = engine.forward_cached(&state, &[&msg.tensor])?;
+                    // use arrival mb index; stash by move once forwarded
+                    let out = engine.forward_cached(&state, &[&tensor])?;
+                    stash[mb] = Some(tensor);
                     send_hop(
                         &ctx.net,
                         ctx.stage_idx,
                         ctx.stage_idx + 1,
                         ctx.codec,
                         ctx.act_tx.as_ref().unwrap(),
-                        msg.mb,
+                        mb,
                         out,
                     )?;
                     continue;
                 };
                 // first stage path
-                stash[mb] = Some(input.clone());
                 let out = engine.forward_cached(&state, &[&input])?;
+                stash[mb] = Some(input);
                 send_hop(
                     &ctx.net,
                     ctx.stage_idx,

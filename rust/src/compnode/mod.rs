@@ -3,23 +3,52 @@
 //! "We employ a task executor to manage the message passing between OPs and
 //! perform the computations of the OPs with their inputs."
 //!
-//! A [`SubDagExecutor`] owns one compnode's share of a decomposed graph: it
-//! reconstructs the sub-DAG from the IR, initializes/loads the parameters of
-//! its parametric OPs, and executes **FP**, **BP** and **Update** tasks. Data
-//! that must cross compnodes is returned as outbound messages — the cluster
-//! layer (or a test) moves them and feeds the receiving executor, exactly
-//! the send-side/receive-side split of §3.6 "Message passing".
+//! A [`SubDagExecutor`] owns one compnode's share of a decomposed graph. At
+//! construction it **compiles** that share into a cached
+//! [`ExecPlan`](crate::exec::ExecPlan) — topological waves of mutually
+//! independent nodes plus liveness refcounts — and every step then just
+//! replays the plan:
+//!
+//! * **FP** walks the forward waves. A wave whose engine is registry-backed
+//!   and whose FLOPs clear the threshold fans out across worker threads
+//!   (bitwise identical to serial — see `exec::executor`). As soon as an
+//!   activation's last in-set consumer has run, its buffer is returned to
+//!   the scratch pool unless the plan keeps it (loss, sink, backward stash,
+//!   or messaged to another compnode).
+//! * **BP** walks the backward waves. Upstream-gradient contributions are
+//!   collected as keyed parts and folded in backward-plan position order,
+//!   so accumulation order — and therefore every bit of every gradient —
+//!   never depends on wave width or message timing. Forward stashes are
+//!   freed the moment their last consumer grad fires.
+//! * **Update** applies the optimizer, unchanged.
+//!
+//! The executor tracks resident activation/gradient bytes and their peak, so
+//! the memory effect of liveness-driven freeing is observable (and can be
+//! compared against the keep-everything baseline via
+//! [`SubDagExecutor::set_liveness_freeing`]).
+//!
+//! Data that must cross compnodes is returned as outbound messages — the
+//! cluster layer (or a test) moves them and feeds the receiving executor,
+//! exactly the send-side/receive-side split of §3.6 "Message passing".
 
 use std::collections::{BTreeSet, HashMap};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::dag::autodiff::BackwardPlan;
+use crate::dag::autodiff::{backward_plan, BackwardPlan};
 use crate::dag::{Graph, NodeId, OpCategory};
 use crate::decompose::Decomposition;
-use crate::exec::{Engine, Optimizer};
+use crate::exec::{
+    wave_threads, BwdJob, Engine, ExecPlan, Optimizer, WaveRunner, WAVE_PAR_MIN_FLOPS,
+};
 use crate::tensor::Tensor;
 use crate::util::Rng;
+
+/// Keys ≥ this mark locally produced gradient parts; below it, remote parts
+/// in arrival order. Sorting parts by key reproduces the serial sweep's
+/// accumulation order (remote grads land before `run_bp`, local ones in
+/// backward-plan position order).
+const LOCAL_BASE: u32 = 1 << 24;
 
 /// An outbound activation or gradient message.
 #[derive(Debug, Clone)]
@@ -39,22 +68,36 @@ pub struct SubDagExecutor {
     graph: std::sync::Arc<Graph>,
     decomp: std::sync::Arc<Decomposition>,
     engine: Box<dyn Engine>,
-    /// Nodes this executor owns, in topological order.
-    my_nodes: Vec<NodeId>,
-    mine: BTreeSet<NodeId>,
+    /// Compiled once at construction, replayed every step.
+    plan: ExecPlan,
+    runner: WaveRunner,
     /// Parameters of owned parametric ops / variables.
     pub params: HashMap<NodeId, Vec<Tensor>>,
-    /// Forward activations (own nodes + received outer-required data).
-    acts: HashMap<NodeId, Tensor>,
-    /// Upstream gradients accumulated per node (from local + remote users).
-    grads_in: HashMap<NodeId, Tensor>,
+    /// Forward activations (own nodes + received outer-required data),
+    /// dense by NodeId.
+    acts: Vec<Option<Tensor>>,
+    /// Pending upstream-gradient contributions per node, folded by key
+    /// (see [`LOCAL_BASE`]) right before the node's backward task runs.
+    grad_parts: Vec<Vec<(u32, Tensor)>>,
     /// Parameter gradients accumulated across microbatches.
     pub param_grads: HashMap<NodeId, Vec<Tensor>>,
     optimizers: HashMap<NodeId, Box<dyn Optimizer>>,
+    /// Eager drop-after-last-use (default). When off, every activation and
+    /// consumed gradient is retained to the end of the step — the
+    /// keep-everything baseline the memory numbers are measured against.
+    liveness: bool,
+    /// Baseline-mode graveyard: tensors that liveness would have freed.
+    retired: Vec<Tensor>,
+    /// Currently resident activation + gradient bytes (params excluded).
+    resident: u64,
+    peak_resident: u64,
+    /// Arrival counter keying remote gradient parts.
+    remote_seq: u32,
 }
 
 impl SubDagExecutor {
-    /// Reconstruct sub-DAG `sub_id` and initialize its parameters.
+    /// Reconstruct sub-DAG `sub_id`, compile its execution plan, and
+    /// initialize its parameters.
     pub fn new(
         graph: std::sync::Arc<Graph>,
         decomp: std::sync::Arc<Decomposition>,
@@ -63,13 +106,12 @@ impl SubDagExecutor {
         opt_factory: &dyn Fn() -> Box<dyn Optimizer>,
         rng: &mut Rng,
     ) -> Result<SubDagExecutor> {
-        let topo = graph.topo_order().map_err(|e| anyhow!("{e}"))?;
-        let my_nodes: Vec<NodeId> =
-            topo.into_iter().filter(|&n| decomp.of_node[n] == sub_id).collect();
-        let mine: BTreeSet<NodeId> = my_nodes.iter().copied().collect();
+        let in_set: Vec<bool> =
+            (0..graph.len()).map(|n| decomp.of_node[n] == sub_id).collect();
+        let plan = ExecPlan::compile(&graph, &in_set, &backward_plan(&graph))?;
         let mut params = HashMap::new();
         let mut optimizers = HashMap::new();
-        for &n in &my_nodes {
+        for &n in &plan.order {
             let node = graph.node(n);
             let p = engine.init_params(node, rng)?;
             if !p.is_empty() {
@@ -77,148 +119,317 @@ impl SubDagExecutor {
                 optimizers.insert(n, opt_factory());
             }
         }
+        let n = graph.len();
         Ok(SubDagExecutor {
             sub_id,
             graph,
             decomp,
             engine,
-            my_nodes,
-            mine,
+            plan,
+            runner: WaveRunner::new(),
             params,
-            acts: HashMap::new(),
-            grads_in: HashMap::new(),
+            acts: vec![None; n],
+            grad_parts: vec![Vec::new(); n],
             param_grads: HashMap::new(),
             optimizers,
+            liveness: true,
+            retired: Vec::new(),
+            resident: 0,
+            peak_resident: 0,
+            remote_seq: 0,
         })
+    }
+
+    /// The compiled plan (wave structure, refcounts, keep sets).
+    pub fn exec_plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    /// Toggle liveness-driven freeing. Off = keep-everything baseline:
+    /// nothing is dropped until [`end_batch`](Self::end_batch), so
+    /// [`peak_resident_bytes`](Self::peak_resident_bytes) reports what the
+    /// step would cost without the plan's refcounts.
+    pub fn set_liveness_freeing(&mut self, on: bool) {
+        self.liveness = on;
+    }
+
+    pub fn liveness_freeing(&self) -> bool {
+        self.liveness
+    }
+
+    /// Currently resident activation + gradient bytes (params excluded).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident
+    }
+
+    /// High-water mark of [`resident_bytes`](Self::resident_bytes) since
+    /// construction (or the last [`reset_peak_resident`](Self::reset_peak_resident)).
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.peak_resident
+    }
+
+    pub fn reset_peak_resident(&mut self) {
+        self.peak_resident = self.resident;
+    }
+
+    fn note_resident(&mut self, bytes: u64) {
+        self.resident += bytes;
+        if self.resident > self.peak_resident {
+            self.peak_resident = self.resident;
+        }
+    }
+
+    /// A tensor is dead: uncount it and park its buffer for reuse.
+    fn release(&mut self, t: Tensor) {
+        self.resident = self.resident.saturating_sub(t.bytes());
+        self.runner.recycle(t);
+    }
+
+    /// Liveness says `t` is dead; the baseline keeps it resident anyway.
+    fn retire(&mut self, t: Tensor) {
+        if self.liveness {
+            self.release(t);
+        } else {
+            self.retired.push(t);
+        }
     }
 
     /// Feed a placeholder value or received outer-required activation.
     pub fn feed(&mut self, node: NodeId, tensor: Tensor) {
-        self.acts.insert(node, tensor);
-    }
-
-    /// Receive a gradient message for one of our nodes.
-    pub fn receive_grad(&mut self, node: NodeId, grad: Tensor) {
-        self.accumulate_grad(node, grad);
-    }
-
-    fn accumulate_grad(&mut self, node: NodeId, grad: Tensor) {
-        match self.grads_in.get_mut(&node) {
-            Some(g) => g.axpy(1.0, &grad),
-            None => {
-                self.grads_in.insert(node, grad);
-            }
+        self.note_resident(tensor.bytes());
+        if let Some(old) = self.acts[node].replace(tensor) {
+            self.resident = self.resident.saturating_sub(old.bytes());
         }
     }
 
-    /// FP task (paper §3.6): execute owned nodes in topo order once their
-    /// inputs are available; returns messages destined for other compnodes.
+    /// Receive a gradient message for one of our nodes. Remote parts fold
+    /// before local ones, in arrival order — the same order the serial
+    /// sweep accumulated them in.
+    pub fn receive_grad(&mut self, node: NodeId, grad: Tensor) {
+        self.note_resident(grad.bytes());
+        let key = self.remote_seq;
+        self.remote_seq += 1;
+        self.grad_parts[node].push((key, grad));
+    }
+
+    /// Fold a node's pending gradient parts into one tensor, in key order.
+    fn fold_grad(&mut self, node: NodeId) -> Option<Tensor> {
+        let mut parts = std::mem::take(&mut self.grad_parts[node]);
+        if parts.is_empty() {
+            return None;
+        }
+        parts.sort_by_key(|&(k, _)| k);
+        let mut it = parts.into_iter();
+        let (_, mut acc) = it.next().unwrap();
+        for (_, g) in it {
+            acc.axpy(1.0, &g);
+            self.retire(g);
+        }
+        Some(acc)
+    }
+
+    /// FP task (paper §3.6): replay the forward waves; returns messages
+    /// destined for other compnodes. Activations die (and their buffers
+    /// recycle) as soon as their last in-set consumer has run, unless the
+    /// plan's keep set pins them.
     pub fn run_fp(&mut self) -> Result<Vec<OutMsg>> {
         let graph = self.graph.clone();
-        for &n in &self.my_nodes.clone() {
-            let node = graph.node(n);
-            if node.kind.category() == OpCategory::Placeholder {
-                if !self.acts.contains_key(&n) {
-                    bail!("placeholder '{}' was not fed", node.name);
+        let threads = wave_threads();
+        let fan_out = threads > 1 && self.engine.registry_backed();
+        let mut live = self.plan.fwd_uses.clone();
+        for wi in 0..self.plan.waves.len() {
+            let wave = self.plan.waves[wi].clone();
+            let mut jobs: Vec<NodeId> = Vec::with_capacity(wave.len());
+            for &n in &wave {
+                let node = graph.node(n);
+                if node.kind.category() == OpCategory::Placeholder {
+                    if self.acts[n].is_none() {
+                        bail!("placeholder '{}' was not fed", node.name);
+                    }
+                } else {
+                    jobs.push(n);
                 }
-                continue;
             }
-            let inputs: Vec<&Tensor> = node
-                .args
-                .iter()
-                .map(|a| {
-                    self.acts
-                        .get(a)
-                        .ok_or_else(|| anyhow!("missing input {} for '{}'", a, node.name))
-                })
-                .collect::<Result<_>>()?;
-            let params = self.params.get(&n).map(Vec::as_slice).unwrap_or(&[]);
-            let out = self.engine.forward(node, &inputs, params)?;
-            self.acts.insert(n, out);
+            let outs: Vec<(NodeId, Tensor)> = if fan_out
+                && jobs.len() > 1
+                && self.plan.wave_flops[wi] >= WAVE_PAR_MIN_FLOPS
+            {
+                self.runner.forward_wave(&graph, &jobs, &self.acts, &self.params, threads)?
+            } else {
+                let mut outs = Vec::with_capacity(jobs.len());
+                for &n in &jobs {
+                    let node = graph.node(n);
+                    let inputs: Vec<&Tensor> = node
+                        .args
+                        .iter()
+                        .map(|&a| {
+                            self.acts[a].as_ref().ok_or_else(|| {
+                                anyhow!("missing input {} for '{}'", a, node.name)
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    let params = self.params.get(&n).map(Vec::as_slice).unwrap_or(&[]);
+                    outs.push((n, self.engine.forward(node, &inputs, params)?));
+                }
+                outs
+            };
+            for (n, t) in outs {
+                self.note_resident(t.bytes());
+                if let Some(old) = self.acts[n].replace(t) {
+                    self.resident = self.resident.saturating_sub(old.bytes());
+                }
+            }
+            // Drop-after-last-use: this wave consumed its args once more.
+            for &n in &jobs {
+                for &a in &graph.node(n).args {
+                    live[a] -= 1;
+                    if live[a] == 0 && self.liveness && !self.plan.keep_after_fp[a] {
+                        if let Some(t) = self.acts[a].take() {
+                            self.release(t);
+                        }
+                    }
+                }
+            }
         }
-        // Outward data: owned nodes with external users (Table 3).
+        // Outward data: owned nodes with external users (Table 3). These
+        // are in the keep set, so their activations survived the sweep.
         let mut msgs = Vec::new();
-        for &n in &self.my_nodes {
+        for &n in &self.plan.order {
             let mut sent_to = BTreeSet::new();
             for &u in graph.users(n) {
                 let dst = self.decomp.of_node[u];
                 if dst != self.sub_id && sent_to.insert(dst) {
-                    msgs.push(OutMsg {
-                        node: n,
-                        to_sub: dst,
-                        tensor: self.acts[&n].clone(),
-                        is_grad: false,
-                    });
+                    let t = self.acts[n]
+                        .as_ref()
+                        .ok_or_else(|| {
+                            anyhow!("activation of '{}' missing for send", graph.node(n).name)
+                        })?
+                        .clone();
+                    msgs.push(OutMsg { node: n, to_sub: dst, tensor: t, is_grad: false });
                 }
             }
         }
         Ok(msgs)
     }
 
-    /// BP task: consume accumulated upstream gradients in reverse topo
-    /// order, produce gradients for args (messaging remote ones) and
-    /// accumulate parameter gradients.
+    /// BP task: replay the backward waves, folding upstream gradients in
+    /// backward-plan position order, producing gradients for args
+    /// (messaging remote ones) and accumulating parameter gradients.
+    /// Forward stashes are freed as soon as their last consumer grad fires.
     ///
     /// `plan` is the global backward plan; this executor runs the portion
     /// covering its nodes. The caller must have delivered all remote
     /// gradient messages for the frontier nodes before invoking.
     pub fn run_bp(&mut self, plan: &BackwardPlan) -> Result<Vec<OutMsg>> {
         let graph = self.graph.clone();
-        let mut msgs = Vec::new();
-        for &n in plan.order.iter() {
-            if !self.mine.contains(&n) {
-                continue;
+        let threads = wave_threads();
+        let fan_out = threads > 1 && self.engine.registry_backed();
+        let mut stash_live = self.plan.stash_uses.clone();
+        // Activations nothing in the backward pass will read (e.g. outputs
+        // kept only for messaging) are dead from the first backward wave.
+        if self.liveness {
+            for n in 0..stash_live.len() {
+                if stash_live[n] == 0 && !self.plan.keep_always[n] {
+                    if let Some(t) = self.acts[n].take() {
+                        self.release(t);
+                    }
+                }
             }
-            let task = plan.task(n).unwrap();
-            let node = graph.node(n);
-            let is_loss = node.kind.category() == OpCategory::Loss;
-            let out_grad = if is_loss {
-                None
+        }
+        let mut msgs = Vec::new();
+        for wi in 0..self.plan.bwd_waves.len() {
+            let wave = self.plan.bwd_waves[wi].clone();
+            let mut jobs: Vec<BwdJob> = Vec::with_capacity(wave.len());
+            for &n in &wave {
+                let node = graph.node(n);
+                let upstream = if node.kind.category() == OpCategory::Loss {
+                    None
+                } else {
+                    Some(
+                        self.fold_grad(n)
+                            .ok_or_else(|| anyhow!("no upstream grad for '{}'", node.name))?,
+                    )
+                };
+                jobs.push(BwdJob { node: n, upstream });
+            }
+            let outs: Vec<(NodeId, crate::exec::BackwardOut)> = if fan_out
+                && jobs.len() > 1
+                && self.plan.bwd_wave_flops[wi] >= WAVE_PAR_MIN_FLOPS
+            {
+                self.runner.backward_wave(&graph, &jobs, &self.acts, &self.params, threads)?
             } else {
-                Some(
-                    self.grads_in
-                        .remove(&n)
-                        .ok_or_else(|| anyhow!("no upstream grad for '{}'", node.name))?,
-                )
+                let mut outs = Vec::with_capacity(jobs.len());
+                for job in &jobs {
+                    let node = graph.node(job.node);
+                    let inputs: Vec<&Tensor> = node
+                        .args
+                        .iter()
+                        .map(|&a| {
+                            self.acts[a].as_ref().ok_or_else(|| {
+                                anyhow!("missing stashed input {a} for '{}'", node.name)
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    let params =
+                        self.params.get(&job.node).map(Vec::as_slice).unwrap_or(&[]);
+                    outs.push((
+                        job.node,
+                        self.engine.backward(node, &inputs, params, job.upstream.as_ref())?,
+                    ));
+                }
+                outs
             };
-            let inputs: Vec<&Tensor> = node
-                .args
-                .iter()
-                .map(|a| {
-                    self.acts
-                        .get(a)
-                        .ok_or_else(|| anyhow!("missing stashed input {a} for '{}'", node.name))
-                })
-                .collect::<Result<_>>()?;
-            let params = self.params.get(&n).map(Vec::as_slice).unwrap_or(&[]);
-            let bwd = self.engine.backward(node, &inputs, params, out_grad.as_ref())?;
-            // Parameter gradients accumulate (microbatching).
-            if !bwd.param_grads.is_empty() {
-                match self.param_grads.get_mut(&n) {
-                    Some(acc) => {
-                        for (a, g) in acc.iter_mut().zip(&bwd.param_grads) {
-                            a.axpy(1.0, g);
+            // The folded upstream grads are consumed.
+            for job in jobs {
+                if let Some(g) = job.upstream {
+                    self.retire(g);
+                }
+            }
+            // Apply results sequentially in wave order: accumulation order
+            // is a function of the plan, never of scheduling.
+            for (n, bwd) in outs {
+                let task = plan.task(n).expect("compiled backward wave nodes participate");
+                // Parameter gradients accumulate (microbatching).
+                if !bwd.param_grads.is_empty() {
+                    match self.param_grads.get_mut(&n) {
+                        Some(acc) => {
+                            for (a, g) in acc.iter_mut().zip(&bwd.param_grads) {
+                                a.axpy(1.0, g);
+                            }
+                        }
+                        None => {
+                            self.param_grads.insert(n, bwd.param_grads);
                         }
                     }
-                    None => {
-                        self.param_grads.insert(n, bwd.param_grads);
+                }
+                // Route input gradients: local targets become keyed parts,
+                // remote ones are sent to the arg's owner (paper: "the
+                // computed gradients are returned to their Arg Nodes").
+                for (ai, g) in bwd.input_grads.into_iter().enumerate() {
+                    let Some(g) = g else { continue };
+                    let arg = graph.node(n).args[ai];
+                    if !task.grad_targets.contains(&arg) {
+                        continue;
+                    }
+                    let owner = self.decomp.of_node[arg];
+                    if owner == self.sub_id {
+                        self.note_resident(g.bytes());
+                        let key = LOCAL_BASE + self.plan.bwd_pos[n] as u32;
+                        self.grad_parts[arg].push((key, g));
+                    } else {
+                        msgs.push(OutMsg { node: arg, to_sub: owner, tensor: g, is_grad: true });
                     }
                 }
             }
-            // Route input gradients: local targets accumulate, remote ones
-            // are sent to the arg's owner (paper: "the computed gradients
-            // are returned to their Arg Nodes").
-            for (ai, g) in bwd.input_grads.into_iter().enumerate() {
-                let Some(g) = g else { continue };
-                let arg = node.args[ai];
-                if !task.grad_targets.contains(&arg) {
-                    continue;
-                }
-                let owner = self.decomp.of_node[arg];
-                if owner == self.sub_id {
-                    self.accumulate_grad(arg, g);
-                } else {
-                    msgs.push(OutMsg { node: arg, to_sub: owner, tensor: g, is_grad: true });
+            // This wave's VJPs re-read their stashes; free the exhausted ones.
+            for &n in &wave {
+                for &a in &graph.node(n).args {
+                    stash_live[a] -= 1;
+                    if stash_live[a] == 0 && self.liveness && !self.plan.keep_always[a] {
+                        if let Some(t) = self.acts[a].take() {
+                            self.release(t);
+                        }
+                    }
                 }
             }
         }
@@ -243,14 +454,26 @@ impl SubDagExecutor {
     }
 
     /// Clear per-batch state (activations + pending grads), keeping params.
+    /// Buffers go back to the scratch pool; `peak_resident_bytes` persists.
     pub fn end_batch(&mut self) {
-        self.acts.clear();
-        self.grads_in.clear();
+        for i in 0..self.acts.len() {
+            if let Some(t) = self.acts[i].take() {
+                self.runner.recycle(t);
+            }
+            for (_, t) in std::mem::take(&mut self.grad_parts[i]) {
+                self.runner.recycle(t);
+            }
+        }
+        self.retired.clear();
+        self.resident = 0;
+        self.remote_seq = 0;
     }
 
-    /// The activation of an owned node (e.g. the loss).
+    /// The activation of an owned node (e.g. the loss). Mid-step, only
+    /// nodes the plan keeps (losses, sinks, stashes, messaged outputs) are
+    /// still resident once their last consumer has run.
     pub fn activation(&self, node: NodeId) -> Option<&Tensor> {
-        self.acts.get(&node)
+        self.acts.get(node).and_then(|t| t.as_ref())
     }
 
     /// Parameter bytes hosted here (what a checkpoint to the supernode
@@ -274,7 +497,8 @@ impl SubDagExecutor {
 mod tests {
     use super::*;
     use crate::dag::autodiff::backward_plan;
-    use crate::exec::{Adam, RefEngine};
+    use crate::dag::{DType, OpKind, Shape};
+    use crate::exec::{set_wave_threads, Adam, RefEngine};
     use crate::models::fig3;
     use std::sync::Arc;
 
@@ -429,5 +653,87 @@ mod tests {
         let (_, _, mut execs) = fig3_cluster();
         let err = execs[0].run_fp().unwrap_err().to_string();
         assert!(err.contains("Input"), "got: {err}");
+    }
+
+    /// A single-sub inference chain: mid-chain activations die as soon as
+    /// their consumer ran; the sink survives; peak stays far below the
+    /// keep-everything baseline.
+    #[test]
+    fn liveness_frees_dead_activations_and_lowers_peak() {
+        let mut g = Graph::new();
+        let mut prev = g.placeholder("x", Shape::of(&[4, 256]), DType::F32);
+        let mut ids = vec![prev];
+        for i in 0..6 {
+            prev = g.op(&format!("r{i}"), OpKind::Relu, &[prev]).unwrap();
+            ids.push(prev);
+        }
+        let g = Arc::new(g);
+        let assign: Vec<(NodeId, usize)> = (0..g.len()).map(|n| (n, 0)).collect();
+        let d = Arc::new(Decomposition::from_assignment(&g, &assign));
+        let run = |freeing: bool| -> (SubDagExecutor, u64) {
+            let mut rng = Rng::new(5);
+            let mut e = SubDagExecutor::new(
+                g.clone(),
+                d.clone(),
+                0,
+                Box::new(RefEngine::new()),
+                &|| Box::new(Adam::new(0.01)),
+                &mut rng,
+            )
+            .unwrap();
+            e.set_liveness_freeing(freeing);
+            let mut rng = Rng::new(6);
+            e.feed(ids[0], Tensor::randn(&[4, 256], 1.0, &mut rng));
+            e.run_fp().unwrap();
+            let peak = e.peak_resident_bytes();
+            (e, peak)
+        };
+        let (freed, peak_freed) = run(true);
+        // Mid-chain gone, sink kept.
+        assert!(freed.activation(ids[2]).is_none(), "r1 should be freed");
+        assert!(freed.activation(*ids.last().unwrap()).is_some());
+        let (kept, peak_kept) = run(false);
+        assert!(kept.activation(ids[2]).is_some(), "baseline keeps everything");
+        assert!(
+            peak_freed < peak_kept,
+            "freeing peak {peak_freed} must undercut baseline {peak_kept}"
+        );
+        // Freeing holds ≤ 3 live tensors (arg + output + kept sink) of the
+        // 7-tensor chain.
+        assert!(peak_freed <= 3 * 4 * 256 * 4);
+    }
+
+    /// Any wave width is bitwise identical to the serial sweep: loss and
+    /// every parameter gradient agree bit for bit.
+    #[test]
+    fn wavefront_training_step_is_bitwise_deterministic() {
+        let collect = |threads: usize| -> (f32, Vec<Vec<u32>>) {
+            set_wave_threads(threads);
+            let (g, _, mut execs) = fig3_cluster();
+            let plan = backward_plan(&g);
+            feed_fig3(&g, &mut execs, 11);
+            run_fp_all(&mut execs).unwrap();
+            let loss_id = g.by_name("CrossEntropy").unwrap().id;
+            let loss = execs[2].activation(loss_id).unwrap().item();
+            run_bp_all(&mut execs, &plan).unwrap();
+            let mut grads: Vec<Vec<u32>> = Vec::new();
+            for e in &execs {
+                let mut keys: Vec<&NodeId> = e.param_grads.keys().collect();
+                keys.sort();
+                for k in keys {
+                    for t in &e.param_grads[k] {
+                        grads.push(t.f().iter().map(|v| v.to_bits()).collect());
+                    }
+                }
+            }
+            (loss, grads)
+        };
+        let (l1, g1) = collect(1);
+        for t in [2, 8] {
+            let (lt, gt) = collect(t);
+            assert_eq!(l1.to_bits(), lt.to_bits(), "loss diverged at {t} threads");
+            assert_eq!(g1, gt, "param grads diverged at {t} threads");
+        }
+        set_wave_threads(1);
     }
 }

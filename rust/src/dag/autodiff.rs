@@ -58,6 +58,34 @@ impl BackwardPlan {
     pub fn is_empty(&self) -> bool {
         self.order.is_empty()
     }
+
+    /// Position of every forward node's task in `order` (`usize::MAX` for
+    /// non-participating nodes). Gradient contributions into a shared arg
+    /// are folded in ascending producer position, which reproduces the
+    /// serial sweep's accumulation order bit for bit no matter how the
+    /// tasks were scheduled.
+    pub fn positions(&self) -> Vec<usize> {
+        let mut pos = vec![usize::MAX; self.tasks.len()];
+        for (i, &id) in self.order.iter().enumerate() {
+            pos[id] = i;
+        }
+        pos
+    }
+
+    /// How many backward tasks read each forward activation as a VJP input
+    /// (every task re-reads its node's `args`). Once a node's count drops
+    /// to zero during the backward sweep, its forward stash is dead and can
+    /// be returned to the scratch pool — "backward waves free forward
+    /// stashes as soon as their last consumer grad fires".
+    pub fn stash_refcounts(&self, g: &Graph) -> Vec<u32> {
+        let mut uses = vec![0u32; g.len()];
+        for &id in &self.order {
+            for &a in &g.node(id).args {
+                uses[a] += 1;
+            }
+        }
+        uses
+    }
 }
 
 /// Build the backward plan for `g`.
@@ -224,6 +252,25 @@ mod tests {
         // upstream), so dead is pruned.
         assert!(plan.task(fc).is_some());
         assert!(plan.task(dead).is_none());
+    }
+
+    #[test]
+    fn positions_and_stash_refcounts_cover_plan() {
+        let g = mlp();
+        let plan = backward_plan(&g);
+        let pos = plan.positions();
+        for (i, &id) in plan.order.iter().enumerate() {
+            assert_eq!(pos[id], i);
+        }
+        assert_eq!(pos[g.by_name("x").unwrap().id], usize::MAX);
+        let uses = plan.stash_refcounts(&g);
+        // x is read once: by fc1's VJP. relu's output twice would require
+        // two users; here fc2's VJP is its only reader.
+        assert_eq!(uses[g.by_name("x").unwrap().id], 1);
+        assert_eq!(uses[g.by_name("relu").unwrap().id], 1);
+        // The loss output is never a VJP input (its VJP reads fc2 and y).
+        assert_eq!(uses[g.by_name("loss").unwrap().id], 0);
+        assert_eq!(uses[g.by_name("y").unwrap().id], 1);
     }
 
     #[test]

@@ -216,19 +216,28 @@ pub struct Graph {
 }
 
 /// Shape-inference or construction error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum GraphError {
-    #[error("shape mismatch at op '{op}': {msg}")]
     Shape { op: String, msg: String },
-    #[error("unknown node id {0}")]
     UnknownNode(NodeId),
-    #[error("graph has a cycle involving node {0}")]
     Cycle(NodeId),
-    #[error("duplicate node name '{0}'")]
     DuplicateName(String),
-    #[error("invalid graph: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Shape { op, msg } => write!(f, "shape mismatch at op '{op}': {msg}"),
+            GraphError::UnknownNode(id) => write!(f, "unknown node id {id}"),
+            GraphError::Cycle(id) => write!(f, "graph has a cycle involving node {id}"),
+            GraphError::DuplicateName(name) => write!(f, "duplicate node name '{name}'"),
+            GraphError::Invalid(msg) => write!(f, "invalid graph: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 impl Graph {
     pub fn new() -> Graph {

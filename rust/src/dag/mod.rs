@@ -31,7 +31,7 @@ pub mod serde;
 pub use ir::{
     infer_shape, DType, Graph, GraphError, Node, NodeId, OpCategory, OpKind, Shape,
 };
-pub use passes::{GraphPass, PassManager, PassReport};
+pub use passes::{GraphPass, Liveness, PassManager, PassReport};
 
 impl Graph {
     /// Serialize to JSON — see [`serde::to_json`].

@@ -236,6 +236,84 @@ impl GraphPass for TopoValidate {
     }
 }
 
+/// Liveness / last-use analysis over a graph (or a sub-DAG of it).
+///
+/// Pure analysis, not a [`GraphPass`]: it never mutates the graph. For an
+/// execution order (topological, optionally restricted to the nodes one
+/// compnode owns) it answers, per node: how many in-set consumers read its
+/// output, and at which position the *last* of them runs. The execution
+/// plan (`exec::plan`) turns this into per-tensor refcounts so activations
+/// return to the scratch pool right after their last use instead of living
+/// to the end of the step — the paper's memory constraint on consumer
+/// devices is about peak-resident bytes, not totals.
+#[derive(Debug, Clone)]
+pub struct Liveness {
+    /// The execution order positions are relative to: the graph's
+    /// topological order restricted to the analyzed set.
+    pub order: Vec<NodeId>,
+    /// Position of each node in `order`; `usize::MAX` for out-of-set nodes.
+    pub pos: Vec<usize>,
+    /// Number of in-set consumers reading each node's output (indexed by
+    /// `NodeId`, covering out-of-set producers whose outputs flow in).
+    pub use_count: Vec<u32>,
+    /// Position in `order` of the last in-set consumer; `None` if nothing
+    /// in the set reads the node.
+    pub last_use: Vec<Option<usize>>,
+}
+
+impl Liveness {
+    /// Analyze the whole graph.
+    pub fn analyze(g: &Graph) -> Result<Liveness, GraphError> {
+        let all = vec![true; g.len()];
+        Liveness::analyze_subset(g, &all)
+    }
+
+    /// Analyze the sub-DAG `in_set` (e.g. one compnode's share). Producers
+    /// outside the set still get `use_count`/`last_use` entries when in-set
+    /// nodes consume them — that is exactly the lifetime of a received
+    /// activation on the consuming compnode.
+    pub fn analyze_subset(g: &Graph, in_set: &[bool]) -> Result<Liveness, GraphError> {
+        let n = g.len();
+        let order: Vec<NodeId> =
+            g.topo_order()?.into_iter().filter(|&id| in_set[id]).collect();
+        let mut pos = vec![usize::MAX; n];
+        for (i, &id) in order.iter().enumerate() {
+            pos[id] = i;
+        }
+        let mut use_count = vec![0u32; n];
+        let mut last_use = vec![None; n];
+        for (i, &id) in order.iter().enumerate() {
+            for &a in &g.node(id).args {
+                use_count[a] += 1;
+                last_use[a] = Some(i);
+            }
+        }
+        Ok(Liveness { order, pos, use_count, last_use })
+    }
+
+    /// Peak resident activation bytes of a forward sweep in `order` when
+    /// every activation is freed immediately after its last use (outputs
+    /// nothing consumes — sinks — are kept). A planning-time estimate of
+    /// what `exec::ExecPlan` achieves at run time for inference DAGs.
+    pub fn peak_resident_bytes(&self, g: &Graph) -> u64 {
+        let mut resident = 0u64;
+        let mut peak = 0u64;
+        for (i, &id) in self.order.iter().enumerate() {
+            resident += crate::dag::flops::activation_bytes(g.node(id));
+            peak = peak.max(resident);
+            let node = g.node(id);
+            for &a in &node.args {
+                if self.last_use[a] == Some(i) {
+                    resident =
+                        resident.saturating_sub(crate::dag::flops::activation_bytes(g.node(a)));
+                }
+            }
+            // A node nothing consumes was counted in; it stays resident.
+        }
+        peak
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +412,61 @@ mod tests {
         g.op("b", OpKind::Gelu, &[x]).unwrap();
         assert!(!DeadNodeElimination.run(&mut g).unwrap());
         assert_eq!(g.len(), 3);
+    }
+
+    #[test]
+    fn liveness_counts_uses_and_last_positions() {
+        // messy_graph: x → r1 → r2 → p → {dead, loss}, dead → dead2.
+        let g = messy_graph();
+        let lv = Liveness::analyze(&g).unwrap();
+        let x = g.by_name("x").unwrap().id;
+        let r1 = g.by_name("r1").unwrap().id;
+        let loss = g.by_name("loss").unwrap().id;
+        assert_eq!(lv.use_count[x], 1, "x feeds r1 only");
+        assert_eq!(lv.use_count[r1], 1);
+        assert_eq!(lv.use_count[loss], 0, "loss is a sink");
+        assert_eq!(lv.last_use[loss], None);
+        // r1's last use is at r2's position.
+        let r2 = g.by_name("r2").unwrap().id;
+        assert_eq!(lv.last_use[r1], Some(lv.pos[r2]));
+        // Every last_use points at a position that really consumes the node.
+        for id in 0..g.len() {
+            if let Some(p) = lv.last_use[id] {
+                assert!(g.node(lv.order[p]).args.contains(&id));
+            }
+        }
+    }
+
+    #[test]
+    fn liveness_subset_tracks_received_inputs() {
+        let g = messy_graph();
+        // Analyze only {r1, r2}: x is an out-of-set producer they consume.
+        let mut in_set = vec![false; g.len()];
+        in_set[g.by_name("r1").unwrap().id] = true;
+        in_set[g.by_name("r2").unwrap().id] = true;
+        let lv = Liveness::analyze_subset(&g, &in_set).unwrap();
+        let x = g.by_name("x").unwrap().id;
+        assert_eq!(lv.order.len(), 2);
+        assert_eq!(lv.pos[x], usize::MAX, "x is out of set");
+        assert_eq!(lv.use_count[x], 1, "but r1 reads it");
+        assert_eq!(lv.last_use[x], Some(0));
+    }
+
+    #[test]
+    fn liveness_peak_is_below_sum_of_activations_on_chains() {
+        // A long chain frees each link after its single consumer, so the
+        // peak is far below the keep-everything total.
+        let mut g = Graph::new();
+        let mut prev = g.placeholder("x", Shape::of(&[4, 64]), DType::F32);
+        for i in 0..16 {
+            prev = g.op(&format!("r{i}"), OpKind::Relu, &[prev]).unwrap();
+        }
+        let lv = Liveness::analyze(&g).unwrap();
+        let peak = lv.peak_resident_bytes(&g);
+        let total: u64 =
+            g.nodes.iter().map(crate::dag::flops::activation_bytes).sum();
+        assert!(peak <= 3 * 4 * 64 * 4, "chain peak holds ≤3 links, got {peak}");
+        assert!(peak < total / 4, "peak {peak} vs total {total}");
     }
 
     #[test]

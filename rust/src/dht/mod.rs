@@ -50,17 +50,26 @@ pub struct Dht {
 }
 
 /// DHT operation errors.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DhtError {
-    #[error("no peers in the ring")]
     Empty,
-    #[error("key '{0}' not found on any live replica")]
     NotFound(String),
-    #[error("peer {0} already joined")]
     AlreadyJoined(PeerId),
-    #[error("peer {0} not in the ring")]
     UnknownPeer(PeerId),
 }
+
+impl std::fmt::Display for DhtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DhtError::Empty => write!(f, "no peers in the ring"),
+            DhtError::NotFound(key) => write!(f, "key '{key}' not found on any live replica"),
+            DhtError::AlreadyJoined(p) => write!(f, "peer {p} already joined"),
+            DhtError::UnknownPeer(p) => write!(f, "peer {p} not in the ring"),
+        }
+    }
+}
+
+impl std::error::Error for DhtError {}
 
 /// SplitMix64 finalizer: FNV on short, similar strings clusters in the low
 /// bits; this scatters ring positions uniformly.

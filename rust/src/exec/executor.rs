@@ -1,0 +1,338 @@
+//! Wave execution: run the mutually independent nodes of one [`ExecPlan`]
+//! wave on worker threads.
+//!
+//! Determinism contract: every node's forward/VJP is the **same** stateless
+//! kernel call ([`kernel_for`]) whether it runs on the caller's thread or a
+//! worker — kernels take scratch buffers zero-filled, so per-thread scratch
+//! pools are numerically invisible. Results are joined back in wave order,
+//! which makes any wave width bitwise identical to the serial sweep. (What
+//! needs ordering care is gradient *accumulation*, and that lives in the
+//! caller: contributions are folded by backward-plan position, never by
+//! completion order.)
+//!
+//! Threading mirrors the GEMM fan-out from the tensor layer: opt-in via
+//! [`set_wave_threads`] or `FUSIONAI_WAVE_THREADS` (default 1 = serial), and
+//! a wave only fans out when its total FLOPs clear
+//! [`WAVE_PAR_MIN_FLOPS`] — spawn/join overhead dominates tiny waves.
+//!
+//! [`kernel_for`]: crate::exec::kernels::kernel_for
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::anyhow;
+
+use crate::dag::{Graph, NodeId};
+use crate::exec::kernels::kernel_for;
+use crate::exec::{BackwardOut, Scratch};
+use crate::tensor::Tensor;
+
+/// 0 = unresolved; resolved lazily from `FUSIONAI_WAVE_THREADS` (default 1).
+static WAVE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Below this many forward FLOPs a wave always runs on the caller's thread.
+pub const WAVE_PAR_MIN_FLOPS: f64 = (1usize << 21) as f64;
+
+/// Set the process-wide wave fan-out (1 = serial, the default).
+pub fn set_wave_threads(threads: usize) {
+    WAVE_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// Current wave fan-out; first call resolves `FUSIONAI_WAVE_THREADS`.
+pub fn wave_threads() -> usize {
+    match WAVE_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let n = std::env::var("FUSIONAI_WAVE_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or(1);
+            WAVE_THREADS.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+/// One backward task handed to a wave: the forward node plus its folded
+/// upstream gradient (`None` seeds a loss node with dL/dL = 1).
+#[derive(Debug)]
+pub struct BwdJob {
+    pub node: NodeId,
+    pub upstream: Option<Tensor>,
+}
+
+/// Runs plan waves, owning one [`Scratch`] pool per worker slot so freed
+/// activation buffers can be recycled into kernel temporaries.
+#[derive(Debug, Default)]
+pub struct WaveRunner {
+    pools: Vec<Scratch>,
+}
+
+impl WaveRunner {
+    pub fn new() -> WaveRunner {
+        WaveRunner { pools: vec![Scratch::new()] }
+    }
+
+    /// Park a dead activation's buffer for reuse by later kernel calls.
+    pub fn recycle(&mut self, t: Tensor) {
+        if let Tensor::F32 { data, .. } = t {
+            self.pools[0].put(data);
+        }
+    }
+
+    /// Scratch-pool hit/miss counters summed over all worker slots.
+    pub fn scratch_stats(&self) -> (u64, u64) {
+        self.pools.iter().fold((0, 0), |(h, m), p| (h + p.hits(), m + p.misses()))
+    }
+
+    fn ensure_pools(&mut self, n: usize) {
+        while self.pools.len() < n {
+            self.pools.push(Scratch::new());
+        }
+    }
+
+    /// Forward one wave of mutually independent `jobs` on up to `threads`
+    /// workers. Returns `(node, output)` pairs **in wave order**.
+    pub fn forward_wave(
+        &mut self,
+        g: &Graph,
+        jobs: &[NodeId],
+        acts: &[Option<Tensor>],
+        params: &HashMap<NodeId, Vec<Tensor>>,
+        threads: usize,
+    ) -> crate::Result<Vec<(NodeId, Tensor)>> {
+        if jobs.is_empty() {
+            return Ok(vec![]);
+        }
+        let t = threads.min(jobs.len()).max(1);
+        self.ensure_pools(t);
+        let chunk = jobs.len().div_ceil(t);
+        let mut results: Vec<crate::Result<Vec<(NodeId, Tensor)>>> = Vec::with_capacity(t);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .chunks(chunk)
+                .zip(self.pools.iter_mut())
+                .map(|(ids, pool)| {
+                    s.spawn(move || {
+                        let mut out = Vec::with_capacity(ids.len());
+                        for &id in ids {
+                            out.push((id, run_forward(g, id, acts, params, pool)?));
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            for h in handles {
+                results.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+            }
+        });
+        let mut outs = Vec::with_capacity(jobs.len());
+        for r in results {
+            outs.extend(r?);
+        }
+        Ok(outs)
+    }
+
+    /// Backward one wave of independent VJP `jobs`. Returns
+    /// `(node, BackwardOut)` pairs **in wave order**; the caller applies
+    /// them sequentially so accumulation order never depends on scheduling.
+    pub fn backward_wave(
+        &mut self,
+        g: &Graph,
+        jobs: &[BwdJob],
+        acts: &[Option<Tensor>],
+        params: &HashMap<NodeId, Vec<Tensor>>,
+        threads: usize,
+    ) -> crate::Result<Vec<(NodeId, BackwardOut)>> {
+        if jobs.is_empty() {
+            return Ok(vec![]);
+        }
+        let t = threads.min(jobs.len()).max(1);
+        self.ensure_pools(t);
+        let chunk = jobs.len().div_ceil(t);
+        let mut results: Vec<crate::Result<Vec<(NodeId, BackwardOut)>>> = Vec::with_capacity(t);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .chunks(chunk)
+                .zip(self.pools.iter_mut())
+                .map(|(batch, pool)| {
+                    s.spawn(move || {
+                        let mut out = Vec::with_capacity(batch.len());
+                        for job in batch {
+                            out.push((job.node, run_backward(g, job, acts, params, pool)?));
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            for h in handles {
+                results.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+            }
+        });
+        let mut outs = Vec::with_capacity(jobs.len());
+        for r in results {
+            outs.extend(r?);
+        }
+        Ok(outs)
+    }
+}
+
+fn gather<'a>(
+    g: &Graph,
+    id: NodeId,
+    acts: &'a [Option<Tensor>],
+) -> crate::Result<Vec<&'a Tensor>> {
+    let node = g.node(id);
+    node.args
+        .iter()
+        .map(|&a| {
+            acts[a]
+                .as_ref()
+                .ok_or_else(|| anyhow!("missing input {} for '{}'", a, node.name))
+        })
+        .collect()
+}
+
+fn run_forward(
+    g: &Graph,
+    id: NodeId,
+    acts: &[Option<Tensor>],
+    params: &HashMap<NodeId, Vec<Tensor>>,
+    scratch: &mut Scratch,
+) -> crate::Result<Tensor> {
+    let node = g.node(id);
+    let inputs = gather(g, id, acts)?;
+    let p = params.get(&id).map(Vec::as_slice).unwrap_or(&[]);
+    kernel_for(&node.kind).forward(node, &inputs, p, scratch)
+}
+
+fn run_backward(
+    g: &Graph,
+    job: &BwdJob,
+    acts: &[Option<Tensor>],
+    params: &HashMap<NodeId, Vec<Tensor>>,
+    scratch: &mut Scratch,
+) -> crate::Result<BackwardOut> {
+    let node = g.node(job.node);
+    let inputs = gather(g, job.node, acts)?;
+    let p = params.get(&job.node).map(Vec::as_slice).unwrap_or(&[]);
+    let seed;
+    let dy = match &job.upstream {
+        Some(t) => t,
+        None => {
+            seed = Tensor::scalar(1.0);
+            &seed
+        }
+    };
+    kernel_for(&node.kind).vjp(node, &inputs, p, dy, scratch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DType, OpKind, Shape};
+    use crate::util::Rng;
+
+    /// A one-wave graph: `k` independent Linears over the same fed input.
+    fn fanout_graph(k: usize) -> (Graph, Vec<NodeId>) {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[4, 16]), DType::F32);
+        let ids = (0..k)
+            .map(|i| {
+                g.op(
+                    &format!("fc{i}"),
+                    OpKind::Linear { in_features: 16, out_features: 8, bias: true },
+                    &[x],
+                )
+                .unwrap()
+            })
+            .collect();
+        (g, ids)
+    }
+
+    fn setup(g: &Graph, ids: &[NodeId]) -> (Vec<Option<Tensor>>, HashMap<NodeId, Vec<Tensor>>) {
+        let mut rng = Rng::new(7);
+        let mut acts = vec![None; g.len()];
+        acts[0] = Some(Tensor::randn(&[4, 16], 1.0, &mut rng));
+        let mut params = HashMap::new();
+        for &id in ids {
+            let node = g.node(id);
+            params.insert(id, kernel_for(&node.kind).init_params(node, &mut rng).unwrap());
+        }
+        (acts, params)
+    }
+
+    #[test]
+    fn forward_wave_is_bitwise_identical_across_widths() {
+        let (g, ids) = fanout_graph(5);
+        let (acts, params) = setup(&g, &ids);
+        let mut serial = WaveRunner::new();
+        let base = serial.forward_wave(&g, &ids, &acts, &params, 1).unwrap();
+        for threads in [2, 3, 8] {
+            let mut runner = WaveRunner::new();
+            let outs = runner.forward_wave(&g, &ids, &acts, &params, threads).unwrap();
+            assert_eq!(outs.len(), base.len());
+            for ((id_a, a), (id_b, b)) in base.iter().zip(&outs) {
+                assert_eq!(id_a, id_b, "wave order must be preserved");
+                assert_eq!(a.f(), b.f(), "t={threads} node {id_a} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_wave_matches_serial_and_seeds_losses() {
+        let (g, ids) = fanout_graph(3);
+        let (acts, params) = setup(&g, &ids);
+        let mk_jobs = || -> Vec<BwdJob> {
+            ids.iter()
+                .map(|&id| {
+                    let dy = Tensor::F32 { shape: vec![4, 8], data: vec![1.0; 32] };
+                    BwdJob { node: id, upstream: Some(dy) }
+                })
+                .collect()
+        };
+        let mut serial = WaveRunner::new();
+        let base = serial.backward_wave(&g, &mk_jobs(), &acts, &params, 1).unwrap();
+        let mut par = WaveRunner::new();
+        let wide = par.backward_wave(&g, &mk_jobs(), &acts, &params, 8).unwrap();
+        for ((id_a, a), (_, b)) in base.iter().zip(&wide) {
+            assert_eq!(a.param_grads[0].f(), b.param_grads[0].f(), "node {id_a}");
+            assert_eq!(
+                a.input_grads[0].as_ref().unwrap().f(),
+                b.input_grads[0].as_ref().unwrap().f()
+            );
+        }
+    }
+
+    #[test]
+    fn recycled_buffers_feed_scratch_hits() {
+        let mut runner = WaveRunner::new();
+        runner.recycle(Tensor::zeros(&[64, 64]));
+        let (hits, _) = runner.scratch_stats();
+        assert_eq!(hits, 0);
+        // The parked buffer satisfies the next same-size take.
+        let buf = runner.pools[0].take(64 * 64);
+        assert_eq!(buf.len(), 64 * 64);
+        let (hits, _) = runner.scratch_stats();
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn missing_input_is_an_error_not_a_panic() {
+        let (g, ids) = fanout_graph(2);
+        let (mut acts, params) = setup(&g, &ids);
+        acts[0] = None;
+        let mut runner = WaveRunner::new();
+        let err = runner.forward_wave(&g, &ids, &acts, &params, 2).unwrap_err();
+        assert!(err.to_string().contains("missing input"), "{err}");
+    }
+
+    #[test]
+    fn wave_threads_env_roundtrip() {
+        set_wave_threads(3);
+        assert_eq!(wave_threads(), 3);
+        set_wave_threads(0); // clamps to 1
+        assert_eq!(wave_threads(), 1);
+    }
+}

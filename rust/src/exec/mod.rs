@@ -18,14 +18,18 @@
 //!   `StageCall` graphs), falling back to the host kernels for any
 //!   non-`StageCall` op.
 
+pub mod executor;
 pub mod kernels;
 pub mod optim;
+pub mod plan;
 pub mod ref_engine;
 pub mod scratch;
 pub mod xla_engine;
 
+pub use executor::{set_wave_threads, wave_threads, BwdJob, WaveRunner, WAVE_PAR_MIN_FLOPS};
 pub use kernels::{kernel_for, OpKernel};
 pub use optim::{Adam, Optimizer, Sgd};
+pub use plan::ExecPlan;
 pub use ref_engine::RefEngine;
 pub use scratch::Scratch;
 
@@ -73,6 +77,16 @@ pub trait Engine {
         params: &[Tensor],
         out_grad: Option<&Tensor>,
     ) -> crate::Result<BackwardOut>;
+
+    /// True when this engine's numerics are pure dispatches into the
+    /// stateless kernel registry with scratch as the only state. The
+    /// wavefront executor may then run a wave's nodes on worker threads
+    /// with per-thread scratch pools — bitwise identical, because each
+    /// node's computation is the exact same kernel call either way.
+    /// Engines with thread-affine state (PJRT handles) keep the default.
+    fn registry_backed(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,266 @@
+//! Compile-then-execute: a [`Graph`] (or one compnode's share of it) is
+//! compiled **once** into an [`ExecPlan`] and the plan is cached for every
+//! subsequent step.
+//!
+//! The plan carries everything the per-step sweeps used to rediscover node
+//! by node:
+//!
+//! * **Waves** — the topological levels of the (sub-)DAG: every node in a
+//!   wave depends only on earlier waves (or on data fed from outside the
+//!   set), so the nodes of one wave are mutually independent and may run on
+//!   worker threads (`exec::executor`).
+//! * **Per-tensor refcounts** — `fwd_uses` (forward consumers inside the
+//!   set, from [`Liveness`]) and `stash_uses` (backward tasks reading the
+//!   activation as a VJP input). When a count hits zero the tensor is dead
+//!   and its buffer returns to the scratch pool instead of living to the
+//!   end of the step.
+//! * **Keep sets** — nodes whose activation must survive the forward sweep
+//!   (losses, sinks, outputs messaged to other compnodes, backward
+//!   stashes) or the whole step (`keep_always`: losses and sinks, which
+//!   remain queryable via `activation()`).
+//! * **FLOP totals per wave** — the threshold gate for the thread fan-out,
+//!   mirroring the GEMM-level `GEMM_PAR_MIN_FLOPS` opt-in from the tensor
+//!   layer.
+
+use crate::dag::autodiff::BackwardPlan;
+use crate::dag::{flops, Graph, Liveness, NodeId, OpCategory};
+
+/// A compiled execution plan for one set of nodes of a graph.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    /// Executed nodes in topological order (the serial oracle order; the
+    /// concatenation of `waves` equals this, level-major).
+    pub order: Vec<NodeId>,
+    /// Membership of the executed set, indexed by `NodeId`.
+    pub mine: Vec<bool>,
+    /// Forward wavefront: topological levels partitioning `order`.
+    pub waves: Vec<Vec<NodeId>>,
+    /// Total forward FLOPs per wave (thread fan-out gate).
+    pub wave_flops: Vec<f64>,
+    /// In-set forward consumers per node (liveness refcount seed).
+    pub fwd_uses: Vec<u32>,
+    /// Activations that must survive the forward sweep.
+    pub keep_after_fp: Vec<bool>,
+    /// Activations kept for the whole step (losses, sinks).
+    pub keep_always: Vec<bool>,
+    /// In-set backward tasks in global backward-plan order.
+    pub bwd_order: Vec<NodeId>,
+    /// Backward wavefront over `bwd_order` (levels of the reversed DAG
+    /// restricted to in-set gradient flow).
+    pub bwd_waves: Vec<Vec<NodeId>>,
+    /// Total backward FLOPs per backward wave.
+    pub bwd_wave_flops: Vec<f64>,
+    /// Global backward-plan position per forward node (`usize::MAX` when
+    /// not participating) — the key that orders gradient folds.
+    pub bwd_pos: Vec<usize>,
+    /// In-set backward tasks reading each activation as a VJP input.
+    pub stash_uses: Vec<u32>,
+}
+
+impl ExecPlan {
+    /// Compile the whole graph as one executed set.
+    pub fn compile_full(g: &Graph, bwd: &BackwardPlan) -> crate::Result<ExecPlan> {
+        let all = vec![true; g.len()];
+        ExecPlan::compile(g, &all, bwd)
+    }
+
+    /// Compile the plan for the nodes with `in_set[id] == true` (one
+    /// compnode's sub-DAG). `bwd` is the *global* backward plan of `g`.
+    pub fn compile(g: &Graph, in_set: &[bool], bwd: &BackwardPlan) -> crate::Result<ExecPlan> {
+        let n = g.len();
+        let lv = Liveness::analyze_subset(g, in_set)?;
+        let order = lv.order;
+        let fwd_uses = lv.use_count;
+
+        // Forward waves: level(n) = 1 + max(level of in-set args); data from
+        // outside the set is available before the sweep starts (level -1).
+        let mut level = vec![0usize; n];
+        let mut n_waves = 0usize;
+        for &id in &order {
+            let l = g
+                .node(id)
+                .args
+                .iter()
+                .filter(|&&a| in_set[a])
+                .map(|&a| level[a] + 1)
+                .max()
+                .unwrap_or(0);
+            level[id] = l;
+            n_waves = n_waves.max(l + 1);
+        }
+        let mut waves: Vec<Vec<NodeId>> = vec![Vec::new(); n_waves];
+        let mut wave_flops = vec![0.0f64; n_waves];
+        for &id in &order {
+            waves[level[id]].push(id);
+            wave_flops[level[id]] += flops::fwd_flops(g.node(id));
+        }
+
+        // Backward: tasks owned here, in global plan order.
+        let bwd_pos = bwd.positions();
+        let bwd_order: Vec<NodeId> =
+            bwd.order.iter().copied().filter(|&id| in_set[id]).collect();
+        // stash_uses: every in-set task re-reads its node's args in the VJP.
+        let mut stash_uses = vec![0u32; n];
+        for &id in &bwd_order {
+            for &a in &g.node(id).args {
+                stash_uses[a] += 1;
+            }
+        }
+        // Backward waves: a task depends on the tasks of its in-set grad
+        // sources (the users supplying its upstream gradient); gradients
+        // from other compnodes arrive before the sweep starts.
+        let mut blevel = vec![0usize; n];
+        let mut n_bwaves = 0usize;
+        for &id in &bwd_order {
+            let task = bwd.task(id).expect("bwd_order holds participating nodes");
+            let l = task
+                .grad_sources
+                .iter()
+                .filter(|&&s| in_set[s])
+                .map(|&s| blevel[s] + 1)
+                .max()
+                .unwrap_or(0);
+            blevel[id] = l;
+            n_bwaves = n_bwaves.max(l + 1);
+        }
+        let mut bwd_waves: Vec<Vec<NodeId>> = vec![Vec::new(); n_bwaves];
+        let mut bwd_wave_flops = vec![0.0f64; n_bwaves];
+        for &id in &bwd_order {
+            bwd_waves[blevel[id]].push(id);
+            bwd_wave_flops[blevel[id]] += flops::bwd_flops(g.node(id));
+        }
+
+        // Keep sets.
+        let mut keep_after_fp = vec![false; n];
+        let mut keep_always = vec![false; n];
+        for id in 0..n {
+            if stash_uses[id] > 0 {
+                keep_after_fp[id] = true; // backward re-reads the stash
+            }
+            if !in_set[id] {
+                continue;
+            }
+            let is_loss = g.node(id).kind.category() == OpCategory::Loss;
+            let is_sink = g.users(id).is_empty();
+            if is_loss || is_sink {
+                // Queryable via activation() for the whole step.
+                keep_after_fp[id] = true;
+                keep_always[id] = true;
+            }
+            if g.users(id).iter().any(|&u| !in_set[u]) {
+                keep_after_fp[id] = true; // messaged to another compnode
+            }
+        }
+
+        Ok(ExecPlan {
+            order,
+            mine: in_set.to_vec(),
+            waves,
+            wave_flops,
+            fwd_uses,
+            keep_after_fp,
+            keep_always,
+            bwd_order,
+            bwd_waves,
+            bwd_wave_flops,
+            bwd_pos,
+            stash_uses,
+        })
+    }
+
+    /// Widest forward wave (how much node-level parallelism exists).
+    pub fn max_wave_width(&self) -> usize {
+        self.waves.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::autodiff::backward_plan;
+    use crate::dag::{DType, OpKind, Shape};
+    use crate::models::fig3;
+
+    fn check_wave_invariants(g: &Graph, plan: &ExecPlan) {
+        // Concatenated waves are a permutation of `order` respecting deps.
+        let flat: Vec<NodeId> = plan.waves.iter().flatten().copied().collect();
+        assert_eq!(flat.len(), plan.order.len());
+        let mut wave_of = vec![usize::MAX; g.len()];
+        for (wi, wave) in plan.waves.iter().enumerate() {
+            for &id in wave {
+                wave_of[id] = wi;
+            }
+        }
+        for &id in &plan.order {
+            for &a in &g.node(id).args {
+                if plan.mine[a] {
+                    assert!(
+                        wave_of[a] < wave_of[id],
+                        "arg {a} of {id} must sit in an earlier wave"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_full_plan_waves_are_valid_and_parallel() {
+        let g = fig3::build();
+        let plan = ExecPlan::compile_full(&g, &backward_plan(&g)).unwrap();
+        check_wave_invariants(&g, &plan);
+        // Fig. 3 has a diamond (Add → {Pool, Multiply}): width ≥ 2.
+        assert!(plan.max_wave_width() >= 2, "waves: {:?}", plan.waves);
+        // Backward also has a wave with Pool's and Multiply's tasks together.
+        let pool = g.by_name("Pool").unwrap().id;
+        let mult = g.by_name("Multiply").unwrap().id;
+        let bw = |id| {
+            plan.bwd_waves
+                .iter()
+                .position(|w| w.contains(&id))
+                .expect("participates")
+        };
+        assert_eq!(bw(pool), bw(mult));
+    }
+
+    #[test]
+    fn fig3_keep_sets_cover_stash_loss_and_cut_edges() {
+        let g = fig3::build();
+        let mut in_set = vec![false; g.len()];
+        for (id, sub) in fig3::paper_partition(&g) {
+            in_set[id] = sub == 1;
+        }
+        let plan = ExecPlan::compile(&g, &in_set, &backward_plan(&g)).unwrap();
+        check_wave_invariants(&g, &plan);
+        // Sub 1 owns Input/Conv/Add/Pool; Add and Pool cross to subs 2/3.
+        let add = g.by_name("Add").unwrap().id;
+        let pool = g.by_name("Pool").unwrap().id;
+        assert!(plan.keep_after_fp[add]);
+        assert!(plan.keep_after_fp[pool]);
+        // Conv's output is re-read by Add's local VJP: stash.
+        let conv = g.by_name("Conv").unwrap().id;
+        assert!(plan.stash_uses[conv] > 0);
+        assert!(plan.keep_after_fp[conv]);
+        // The loss lives on sub 3, not here.
+        let ce = g.by_name("CrossEntropy").unwrap().id;
+        assert!(!plan.mine[ce]);
+        assert!(plan.bwd_order.iter().all(|&id| plan.mine[id]));
+    }
+
+    #[test]
+    fn chain_graph_has_singleton_waves_and_frees_everything_mid_chain() {
+        let mut g = Graph::new();
+        let mut prev = g.placeholder("x", Shape::of(&[2, 8]), DType::F32);
+        for i in 0..5 {
+            prev = g.op(&format!("r{i}"), OpKind::Relu, &[prev]).unwrap();
+        }
+        let plan = ExecPlan::compile_full(&g, &backward_plan(&g)).unwrap();
+        assert_eq!(plan.max_wave_width(), 1);
+        assert_eq!(plan.waves.len(), 6);
+        // Inference chain (no loss): only the sink survives the sweep.
+        let kept: Vec<&str> = (0..g.len())
+            .filter(|&i| plan.keep_after_fp[i])
+            .map(|i| g.node(i).name.as_str())
+            .collect();
+        assert_eq!(kept, vec!["r4"]);
+    }
+}

@@ -63,6 +63,12 @@ impl Engine for RefEngine {
         let dy = out_grad.unwrap_or(&seeded);
         kernel_for(&node.kind).vjp(node, inputs, params, dy, &mut self.scratch)
     }
+
+    /// Every call above is a stateless registry dispatch, so the wavefront
+    /// executor may fan waves out across threads without changing a bit.
+    fn registry_backed(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

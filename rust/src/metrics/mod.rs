@@ -38,6 +38,16 @@ impl Metrics {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Keep the gauge at the maximum of its current and `v` (high-water
+    /// marks such as peak resident bytes).
+    pub fn set_max_gauge(&self, name: &str, v: f64) {
+        let mut gauges = self.gauges.lock().unwrap();
+        let e = gauges.entry(name.to_string()).or_insert(v);
+        if v > *e {
+            *e = v;
+        }
+    }
+
     pub fn observe(&self, name: &str, v: f64) {
         self.samples.lock().unwrap().entry(name.to_string()).or_default().add(v);
     }
@@ -148,6 +158,16 @@ mod tests {
         assert_eq!(m.counter("msgs"), 5);
         assert_eq!(m.counter("other"), 0);
         assert_eq!(m.gauge("loss"), Some(1.5));
+    }
+
+    #[test]
+    fn max_gauge_is_a_high_water_mark() {
+        let m = Metrics::new();
+        m.set_max_gauge("peak", 10.0);
+        m.set_max_gauge("peak", 4.0);
+        assert_eq!(m.gauge("peak"), Some(10.0));
+        m.set_max_gauge("peak", 12.5);
+        assert_eq!(m.gauge("peak"), Some(12.5));
     }
 
     #[test]

@@ -103,11 +103,22 @@ impl Schedule {
 }
 
 /// Scheduling failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SchedError {
-    #[error("task {0} fits on no peer (memory constraints)")]
     Infeasible(usize),
 }
+
+impl std::fmt::Display for SchedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedError::Infeasible(t) => {
+                write!(f, "task {t} fits on no peer (memory constraints)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
 
 fn fits(task: &TaskSpec, peer: &PeerSpec, gpu: u64, cpu: u64, disk: u64) -> bool {
     gpu + task.gpu_bytes <= peer.gpu_capacity

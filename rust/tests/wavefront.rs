@@ -1,0 +1,257 @@
+//! Wavefront executor properties (§Perf "Execution plan").
+//!
+//! 1. **Bitwise determinism**: on random shape-preserving DAGs, a full
+//!    FP→BP cycle through [`SubDagExecutor`] at wave widths 1, 2 and 8 is
+//!    bit-for-bit identical — and all of them match an independent serial
+//!    oracle that walks the graph in plain topological order with immediate
+//!    gradient accumulation (no plan, no waves, no scratch reuse).
+//! 2. **Memory**: on the paper's Figure-3 cluster, liveness-driven freeing
+//!    keeps the peak resident bytes strictly below the keep-everything
+//!    baseline while leaving the loss bits untouched.
+//!
+//! Shapes are `[64, 128]` so Linear-bearing waves clear
+//! `WAVE_PAR_MIN_FLOPS` and the fan-out path genuinely runs.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use fusionai::cluster::SimCluster;
+use fusionai::compnode::SubDagExecutor;
+use fusionai::dag::autodiff::{backward_plan, BackwardPlan};
+use fusionai::dag::{DType, Graph, NodeId, OpCategory, OpKind, Shape};
+use fusionai::decompose::Decomposition;
+use fusionai::exec::{set_wave_threads, Adam, Engine, RefEngine};
+use fusionai::models::fig3;
+use fusionai::net::{NetworkSim, Topology};
+use fusionai::perf::comm::LinkModel;
+use fusionai::proptesting::{check, Gen};
+use fusionai::tensor::Tensor;
+use fusionai::util::Rng;
+
+const B: usize = 64;
+const D: usize = 128;
+
+/// Random DAG of shape-preserving `[B, D]` ops ending in
+/// `MseLoss(Linear(last), target)`. Returns the graph plus the two
+/// placeholder ids to feed.
+fn random_dag(gn: &mut Gen) -> (Graph, NodeId, NodeId) {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", Shape::of(&[B, D]), DType::F32);
+    let mut pool = vec![x];
+    let n_ops = gn.usize(5, 12);
+    for i in 0..n_ops {
+        let a = *gn.choose(&pool);
+        let lin = OpKind::Linear { in_features: D, out_features: D, bias: true };
+        let id = match gn.usize(0, 7) {
+            0 => g.op(&format!("relu{i}"), OpKind::Relu, &[a]).unwrap(),
+            1 => g.op(&format!("gelu{i}"), OpKind::Gelu, &[a]).unwrap(),
+            2 => g.op(&format!("sm{i}"), OpKind::Softmax, &[a]).unwrap(),
+            3 => g.op(&format!("ln{i}"), OpKind::LayerNorm { dim: D }, &[a]).unwrap(),
+            4 => g.op(&format!("fc{i}"), lin, &[a]).unwrap(),
+            5 => {
+                let b = *gn.choose(&pool);
+                g.op(&format!("add{i}"), OpKind::Add, &[a, b]).unwrap()
+            }
+            _ => {
+                let b = *gn.choose(&pool);
+                g.op(&format!("mul{i}"), OpKind::Multiply, &[a, b]).unwrap()
+            }
+        };
+        pool.push(id);
+    }
+    // A parametric head guarantees the loss depends on trainable state.
+    let head = g
+        .op(
+            "head",
+            OpKind::Linear { in_features: D, out_features: D, bias: true },
+            &[*pool.last().unwrap()],
+        )
+        .unwrap();
+    let target = g.placeholder("target", Shape::of(&[B, D]), DType::F32);
+    g.op("loss", OpKind::MseLoss, &[head, target]).unwrap();
+    (g, x, target)
+}
+
+type GradBits = BTreeMap<NodeId, Vec<Vec<u32>>>;
+
+fn bits_of(grads: &[Tensor]) -> Vec<Vec<u32>> {
+    grads.iter().map(|t| t.f().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+/// Run one FP→BP cycle through the plan-based executor at the given wave
+/// width. Returns (loss bits, param-grad bits, checkpointed params).
+#[allow(clippy::type_complexity)]
+fn run_executor(
+    g: &Arc<Graph>,
+    d: &Arc<Decomposition>,
+    plan: &BackwardPlan,
+    feeds: &[(NodeId, Tensor)],
+    seed: u64,
+    threads: usize,
+) -> (u32, GradBits, HashMap<NodeId, Vec<Tensor>>) {
+    set_wave_threads(threads);
+    let mut rng = Rng::new(seed);
+    let mut e = SubDagExecutor::new(
+        g.clone(),
+        d.clone(),
+        0,
+        Box::new(RefEngine::new()),
+        &|| Box::new(Adam::new(0.01)),
+        &mut rng,
+    )
+    .unwrap();
+    let ckpt = e.checkpoint();
+    for (n, t) in feeds {
+        e.feed(*n, t.clone());
+    }
+    assert!(e.run_fp().unwrap().is_empty(), "single sub sends nothing");
+    let loss_id = g.by_name("loss").unwrap().id;
+    let loss = e.activation(loss_id).unwrap().item().to_bits();
+    assert!(e.run_bp(plan).unwrap().is_empty());
+    let mut grads: GradBits = BTreeMap::new();
+    for (&n, pg) in &e.param_grads {
+        grads.insert(n, bits_of(pg));
+    }
+    set_wave_threads(1);
+    (loss, grads, ckpt)
+}
+
+/// Independent serial oracle: forward in node-id (= topological) order,
+/// backward in plan order with immediate axpy accumulation. Shares nothing
+/// with the wavefront executor beyond the per-op kernels.
+fn run_oracle(
+    g: &Graph,
+    plan: &BackwardPlan,
+    params: &HashMap<NodeId, Vec<Tensor>>,
+    feeds: &[(NodeId, Tensor)],
+) -> (u32, GradBits) {
+    let mut eng = RefEngine::new();
+    let mut acts: Vec<Option<Tensor>> = vec![None; g.len()];
+    for (n, t) in feeds {
+        acts[*n] = Some(t.clone());
+    }
+    for node in &g.nodes {
+        if node.kind.category() == OpCategory::Placeholder {
+            continue;
+        }
+        let inputs: Vec<&Tensor> = node.args.iter().map(|&a| acts[a].as_ref().unwrap()).collect();
+        let p = params.get(&node.id).map(Vec::as_slice).unwrap_or(&[]);
+        let out = eng.forward(node, &inputs, p).unwrap();
+        acts[node.id] = Some(out);
+    }
+    let loss = acts[g.by_name("loss").unwrap().id].as_ref().unwrap().item().to_bits();
+    let mut grads: Vec<Option<Tensor>> = vec![None; g.len()];
+    let mut pgrads: GradBits = BTreeMap::new();
+    for &n in &plan.order {
+        let node = g.node(n);
+        let task = plan.task(n).unwrap();
+        let upstream = if node.kind.category() == OpCategory::Loss {
+            None
+        } else {
+            Some(grads[n].clone().expect("upstream grad ready"))
+        };
+        let inputs: Vec<&Tensor> = node.args.iter().map(|&a| acts[a].as_ref().unwrap()).collect();
+        let p = params.get(&n).map(Vec::as_slice).unwrap_or(&[]);
+        let out = eng.backward(node, &inputs, p, upstream.as_ref()).unwrap();
+        if !out.param_grads.is_empty() {
+            pgrads.insert(n, bits_of(&out.param_grads));
+        }
+        for (ai, gt) in out.input_grads.into_iter().enumerate() {
+            let Some(gt) = gt else { continue };
+            let arg = node.args[ai];
+            if !task.grad_targets.contains(&arg) {
+                continue;
+            }
+            match &mut grads[arg] {
+                None => grads[arg] = Some(gt),
+                Some(acc) => acc.axpy(1.0, &gt),
+            }
+        }
+    }
+    (loss, pgrads)
+}
+
+#[test]
+fn wavefront_is_bitwise_identical_to_serial_oracle_on_random_dags() {
+    check("wavefront-bitwise", 6, |gn| {
+        let (g, x, target) = random_dag(gn);
+        let g = Arc::new(g);
+        let assign: Vec<(NodeId, usize)> = (0..g.len()).map(|n| (n, 0)).collect();
+        let d = Arc::new(Decomposition::from_assignment(&g, &assign));
+        let plan = backward_plan(&g);
+        let feeds = vec![
+            (x, Tensor::F32 { shape: vec![B, D], data: gn.vec_f32(B * D, 1.0) }),
+            (target, Tensor::F32 { shape: vec![B, D], data: gn.vec_f32(B * D, 1.0) }),
+        ];
+        let seed = gn.seed;
+        let (l1, g1, ckpt) = run_executor(&g, &d, &plan, &feeds, seed, 1);
+        for threads in [2, 8] {
+            let (lt, gt, _) = run_executor(&g, &d, &plan, &feeds, seed, threads);
+            if lt != l1 {
+                return Err(format!("loss bits diverged at {threads} threads"));
+            }
+            if gt != g1 {
+                return Err(format!("param grads diverged at {threads} threads"));
+            }
+        }
+        let (lo, go) = run_oracle(&g, &plan, &ckpt, &feeds);
+        if lo != l1 {
+            return Err("loss bits diverged from serial oracle".into());
+        }
+        if go != g1 {
+            return Err("param grads diverged from serial oracle".into());
+        }
+        Ok(())
+    });
+}
+
+fn fig3_cluster() -> SimCluster {
+    let g = fig3::build();
+    let d = Decomposition::from_assignment(&g, &fig3::paper_partition(&g));
+    let net = Arc::new(NetworkSim::new(Topology::uniform(LinkModel::local()), 0.0));
+    SimCluster::new(
+        g,
+        d,
+        net,
+        Box::new(|| Box::new(RefEngine::new())),
+        Box::new(|| Box::new(Adam::new(0.02))),
+        42,
+    )
+    .unwrap()
+}
+
+fn fig3_step(cluster: &mut SimCluster) -> fusionai::cluster::StepReport {
+    let mut rng = Rng::new(7);
+    let input = Tensor::randn(&[fig3::BATCH, fig3::CH, fig3::HW, fig3::HW], 1.0, &mut rng);
+    let n_lab = fig3::BATCH * 2 * fig3::CH * fig3::HW;
+    let labels = Tensor::from_ivec(
+        &[fig3::BATCH, 2 * fig3::CH, fig3::HW],
+        (0..n_lab).map(|i| (i % fig3::CLASSES) as i32).collect(),
+    );
+    cluster.feed("Input", input).unwrap();
+    cluster.feed("Label", labels).unwrap();
+    cluster.train_step().unwrap()
+}
+
+/// Figure-3 memory deliverable: liveness freeing strictly undercuts the
+/// keep-everything baseline's peak, at identical loss bits.
+#[test]
+fn fig3_peak_resident_drops_under_liveness_freeing() {
+    let mut freeing = fig3_cluster();
+    let r_free = fig3_step(&mut freeing);
+    let mut baseline = fig3_cluster();
+    baseline.set_liveness_freeing(false);
+    let r_base = fig3_step(&mut baseline);
+    assert!(r_free.peak_resident_bytes > 0);
+    assert!(
+        r_free.peak_resident_bytes < r_base.peak_resident_bytes,
+        "freeing peak {} must be strictly below baseline {}",
+        r_free.peak_resident_bytes,
+        r_base.peak_resident_bytes
+    );
+    assert_eq!(
+        r_free.loss.unwrap().to_bits(),
+        r_base.loss.unwrap().to_bits(),
+        "freeing must not change numerics"
+    );
+}
