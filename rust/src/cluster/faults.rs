@@ -1,0 +1,227 @@
+//! Deterministic fault injection for the live trainer.
+//!
+//! Geo-distributed training treats peer failure as the common case, so
+//! every recovery path in `cluster::train` must be exercisable on demand.
+//! A [`FaultPlan`] is a list of one-shot faults armed against (stage, step)
+//! or (hop, step) coordinates; the trainer consults it at the exact points
+//! where a real fault would bite (worker step loop, `send_hop`, checkpoint
+//! publish) and the plan "fires" each fault at most once — so a recovered
+//! run replaying the same step does not re-trip the same fault.
+//!
+//! Plans parse from a compact grammar (CLI `--faults`, TOML
+//! `[recovery] faults = "..."`). Semicolon-separated clauses, each
+//! `kind:key=value,...`:
+//!
+//! ```text
+//!   kill:stage=1,step=3           worker thread errors out at step 3
+//!   stall:stage=0,step=2,ms=500   worker sleeps 500ms before step 2
+//!   drop:from=0,to=1,step=2       one activation/grad hop is lost
+//!   delay:from=1,to=2,step=4,ms=100   one hop is late by 100ms
+//!   truncate:step=4,keep=32       checkpoint written at step 4 is cut to 32 bytes
+//! ```
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// One injectable fault, armed at a (stage/hop, step) coordinate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Stage `stage`'s worker returns an error at the top of step `step`.
+    Kill { stage: usize, step: usize },
+    /// Stage `stage` sleeps `ms` before step `step` (exercises heartbeat
+    /// timeouts without a hard failure).
+    Stall { stage: usize, step: usize, ms: u64 },
+    /// The first `from`→`to` hop of step `step` is lost in flight.
+    DropHop { from: usize, to: usize, step: usize },
+    /// The first `from`→`to` hop of step `step` arrives `ms` late.
+    DelayHop { from: usize, to: usize, step: usize, ms: u64 },
+    /// The v2 checkpoint written at the end of step `step` is truncated to
+    /// `keep` bytes after publish (exercises the `.prev` fallback).
+    TruncateCheckpoint { step: usize, keep: u64 },
+}
+
+/// What `fire_hop` tells `send_hop` to do to a message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HopFault {
+    Drop,
+    DelayMs(u64),
+}
+
+/// A set of one-shot faults shared (behind `Arc`) between the coordinator
+/// and every stage thread. Interior mutability so firing needs only `&self`.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    slots: Mutex<Vec<(Fault, bool)>>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan { slots: Mutex::new(faults.into_iter().map(|f| (f, false)).collect()) }
+    }
+
+    /// Parse the `--faults` grammar (see module docs). Empty string → empty
+    /// plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            faults.push(parse_clause(clause).with_context(|| format!("fault clause '{clause}'"))?);
+        }
+        Ok(FaultPlan::new(faults))
+    }
+
+    /// Number of faults that have not fired yet.
+    pub fn remaining(&self) -> usize {
+        self.slots.lock().unwrap().iter().filter(|(_, fired)| !fired).count()
+    }
+
+    fn fire<T>(&self, mut hit: impl FnMut(&Fault) -> Option<T>) -> Option<T> {
+        let mut slots = self.slots.lock().unwrap();
+        for (fault, fired) in slots.iter_mut() {
+            if *fired {
+                continue;
+            }
+            if let Some(v) = hit(fault) {
+                *fired = true;
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// True if a `kill` fault is armed for this stage at this step.
+    pub fn fire_kill(&self, stage: usize, step: usize) -> bool {
+        self.fire(|f| match f {
+            Fault::Kill { stage: s, step: k } if *s == stage && *k == step => Some(()),
+            _ => None,
+        })
+        .is_some()
+    }
+
+    /// Milliseconds to stall, if a `stall` fault is armed here.
+    pub fn fire_stall(&self, stage: usize, step: usize) -> Option<u64> {
+        self.fire(|f| match f {
+            Fault::Stall { stage: s, step: k, ms } if *s == stage && *k == step => Some(*ms),
+            _ => None,
+        })
+    }
+
+    /// Hop-level fault for a `from`→`to` message in `step`, if armed.
+    pub fn fire_hop(&self, from: usize, to: usize, step: usize) -> Option<HopFault> {
+        self.fire(|f| match f {
+            Fault::DropHop { from: a, to: b, step: k } if (*a, *b, *k) == (from, to, step) => {
+                Some(HopFault::Drop)
+            }
+            Fault::DelayHop { from: a, to: b, step: k, ms }
+                if (*a, *b, *k) == (from, to, step) =>
+            {
+                Some(HopFault::DelayMs(*ms))
+            }
+            _ => None,
+        })
+    }
+
+    /// Bytes to keep of the checkpoint just written at `step`, if a
+    /// `truncate` fault is armed.
+    pub fn fire_truncate(&self, step: usize) -> Option<u64> {
+        self.fire(|f| match f {
+            Fault::TruncateCheckpoint { step: k, keep } if *k == step => Some(*keep),
+            _ => None,
+        })
+    }
+}
+
+fn parse_clause(clause: &str) -> Result<Fault> {
+    let (kind, rest) = clause.split_once(':').unwrap_or((clause, ""));
+    let mut kv = std::collections::HashMap::new();
+    for pair in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').with_context(|| format!("expected key=value in '{pair}'"))?;
+        let v: u64 = v.trim().parse().with_context(|| format!("non-numeric value in '{pair}'"))?;
+        kv.insert(k.trim().to_string(), v);
+    }
+    let mut get = |key: &str| -> Result<u64> {
+        kv.remove(key).with_context(|| format!("'{kind}' fault needs '{key}='"))
+    };
+    let fault = match kind {
+        "kill" => Fault::Kill { stage: get("stage")? as usize, step: get("step")? as usize },
+        "stall" => Fault::Stall {
+            stage: get("stage")? as usize,
+            step: get("step")? as usize,
+            ms: get("ms")?,
+        },
+        "drop" => Fault::DropHop {
+            from: get("from")? as usize,
+            to: get("to")? as usize,
+            step: get("step")? as usize,
+        },
+        "delay" => Fault::DelayHop {
+            from: get("from")? as usize,
+            to: get("to")? as usize,
+            step: get("step")? as usize,
+            ms: get("ms")?,
+        },
+        "truncate" => {
+            Fault::TruncateCheckpoint { step: get("step")? as usize, keep: get("keep")? }
+        }
+        other => bail!("unknown fault kind '{other}' (kill|stall|drop|delay|truncate)"),
+    };
+    if let Some(stray) = kv.keys().next() {
+        bail!("unknown key '{stray}' for '{kind}' fault");
+    }
+    Ok(fault)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_kinds() {
+        let plan = FaultPlan::parse(
+            "kill:stage=1,step=3; stall:stage=0,step=2,ms=500; drop:from=0,to=1,step=2; \
+             delay:from=1,to=2,step=4,ms=100; truncate:step=4,keep=32",
+        )
+        .unwrap();
+        assert_eq!(plan.remaining(), 5);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("explode:stage=1").is_err());
+        assert!(FaultPlan::parse("kill:stage=1").is_err(), "missing step");
+        assert!(FaultPlan::parse("kill:stage=1,step=2,bogus=3").is_err(), "stray key");
+        assert!(FaultPlan::parse("kill:stage=x,step=2").is_err(), "non-numeric");
+        assert_eq!(FaultPlan::parse("").unwrap().remaining(), 0);
+        assert_eq!(FaultPlan::parse(" ; ").unwrap().remaining(), 0);
+    }
+
+    #[test]
+    fn faults_fire_exactly_once() {
+        let plan = FaultPlan::parse("kill:stage=1,step=3").unwrap();
+        assert!(!plan.fire_kill(0, 3), "wrong stage");
+        assert!(!plan.fire_kill(1, 2), "wrong step");
+        assert!(plan.fire_kill(1, 3));
+        assert!(!plan.fire_kill(1, 3), "one-shot: replay must not re-trip");
+        assert_eq!(plan.remaining(), 0);
+    }
+
+    #[test]
+    fn hop_faults_match_coordinates() {
+        let plan = FaultPlan::parse("drop:from=0,to=1,step=2; delay:from=1,to=2,step=2,ms=50")
+            .unwrap();
+        assert_eq!(plan.fire_hop(0, 1, 1), None);
+        assert_eq!(plan.fire_hop(0, 1, 2), Some(HopFault::Drop));
+        assert_eq!(plan.fire_hop(0, 1, 2), None, "one-shot");
+        assert_eq!(plan.fire_hop(1, 2, 2), Some(HopFault::DelayMs(50)));
+    }
+
+    #[test]
+    fn stall_and_truncate() {
+        let plan = FaultPlan::parse("stall:stage=0,step=2,ms=500; truncate:step=4,keep=32")
+            .unwrap();
+        assert_eq!(plan.fire_stall(0, 2), Some(500));
+        assert_eq!(plan.fire_stall(0, 2), None);
+        assert_eq!(plan.fire_truncate(3), None);
+        assert_eq!(plan.fire_truncate(4), Some(32));
+    }
+}

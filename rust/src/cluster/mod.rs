@@ -9,12 +9,28 @@
 //! * [`train`] — the live pipeline trainer: one OS thread per compnode,
 //!   each owning a private PJRT runtime ([`crate::exec::XlaEngine`]),
 //!   GPipe microbatching over real channels with simulated WAN delays and
-//!   optional compression. This is the end-to-end production path.
+//!   optional compression, under a supervising coordinator that detects
+//!   stage failure and replays from the last recovery checkpoint. This is
+//!   the end-to-end production path;
+//! * [`stage_backend`] — the per-stage compute contract the trainer drives
+//!   (XLA artifacts, or a deterministic host simulator for fault tests);
+//! * [`faults`] — deterministic fault injection exercised by the recovery
+//!   integration tests;
+//! * [`checkpoint`] — the `FAICKPT` formats: v1 (params, what `serve`
+//!   loads) and v2 (params + Adam moments + step, what recovery resumes
+//!   from).
 
 pub mod checkpoint;
 pub mod data;
+pub mod faults;
 pub mod sim;
+pub mod stage_backend;
 pub mod train;
 
+pub use checkpoint::{CheckpointV2, StageSnapshot};
+pub use faults::{Fault, FaultPlan, HopFault};
 pub use sim::{SimCluster, StepReport};
+pub use stage_backend::{
+    SimStageFactory, SimStagesConfig, StageBackend, StageBackendFactory, XlaStageFactory,
+};
 pub use train::{PipelineTrainer, TrainConfig, TrainReport};

@@ -1,0 +1,673 @@
+//! Pluggable per-stage compute for the live pipeline trainer.
+//!
+//! The trainer's supervisor (see [`crate::cluster::train`]) must not care
+//! *how* a stage computes — only that it can run forward/backward/update
+//! and snapshot/restore its full training state for recovery. That contract
+//! is [`StageBackend`]; stage threads build their backend through a shared
+//! [`StageBackendFactory`] (backends themselves are deliberately not
+//! `Send`: the XLA backend holds thread-affine PJRT handles, so each stage
+//! thread constructs its own).
+//!
+//! Two backends ship in-tree:
+//!
+//! * [`XlaStageFactory`] → AOT-compiled PJRT artifacts (the production hot
+//!   path; requires a real PJRT plugin);
+//! * [`SimStageFactory`] → a tiny pure-rust residual-tanh LM
+//!   (embed → block… → head with softmax cross-entropy). Bitwise
+//!   deterministic, no artifacts needed — this is what the fault-injection
+//!   tests and CI drive the full supervisor/recovery machinery with.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::checkpoint::StageSnapshot;
+use crate::exec::xla_engine::{stage_kind, StageKind, StageState, XlaEngine};
+use crate::runtime::{InitKind, Manifest, ParamSpec};
+use crate::tensor::{self, Tensor};
+use crate::util::Rng;
+
+/// One pipeline stage's compute + optimizer state.
+///
+/// The backward contract mirrors `XlaEngine`: returns
+/// `(dx, param_grads, loss)` where `dx` is `None` for the embed stage and
+/// `loss` is `Some` only for the head stage. `backward` rematerializes —
+/// it recomputes forward intermediates from `inputs`, so callers stash only
+/// stage inputs per microbatch.
+pub trait StageBackend {
+    fn stage(&self) -> &str;
+    /// Forward: `[tokens]` (embed), `[h]` (block) — head stages train
+    /// through `backward` directly.
+    fn forward(&mut self, inputs: &[&Tensor]) -> Result<Tensor>;
+    /// Backward: embed `[tokens]` + dh, block `[x]` + dh', head
+    /// `[h, labels]` + `None`.
+    fn backward(
+        &mut self,
+        inputs: &[&Tensor],
+        out_grad: Option<&Tensor>,
+    ) -> Result<(Option<Tensor>, Vec<Tensor>, Option<f32>)>;
+    /// Adam update; `step` is 1-based so resumed runs bias-correct exactly
+    /// like uninterrupted ones.
+    fn update(&mut self, grads: &[Tensor], step: i32) -> Result<()>;
+    /// Full training state (params + Adam moments) as host tensors.
+    fn snapshot(&self) -> StageSnapshot;
+    /// Replace training state from a snapshot (recovery restore).
+    fn restore(&mut self, snap: &StageSnapshot) -> Result<()>;
+    fn n_params(&self) -> usize;
+}
+
+/// Thread-safe constructor of per-stage backends. `seed` is the run seed;
+/// implementations derive the per-stage init stream from it the same way
+/// (`seed ^ stage_idx << 17`) so trajectories are comparable across
+/// backends of the same numerics.
+pub trait StageBackendFactory: Send + Sync {
+    fn make(&self, stage: &str, stage_idx: usize, seed: u64) -> Result<Box<dyn StageBackend>>;
+}
+
+fn stage_rng(seed: u64, stage_idx: usize) -> Rng {
+    Rng::new(seed ^ (stage_idx as u64) << 17)
+}
+
+// ---------------------------------------------------------------------------
+// XLA-backed stages
+// ---------------------------------------------------------------------------
+
+/// Factory for artifact-backed stages (one `XlaEngine` per stage thread).
+pub struct XlaStageFactory {
+    pub dir: std::path::PathBuf,
+}
+
+impl StageBackendFactory for XlaStageFactory {
+    fn make(&self, stage: &str, stage_idx: usize, seed: u64) -> Result<Box<dyn StageBackend>> {
+        let engine = XlaEngine::load_stage(&self.dir, stage)?;
+        let mut rng = stage_rng(seed, stage_idx);
+        let state = engine.new_stage_state(stage, &mut rng)?;
+        Ok(Box::new(XlaStageBackend { engine, state }))
+    }
+}
+
+struct XlaStageBackend {
+    engine: XlaEngine,
+    state: StageState,
+}
+
+impl StageBackend for XlaStageBackend {
+    fn stage(&self) -> &str {
+        &self.state.stage
+    }
+
+    fn forward(&mut self, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.engine.forward_cached(&self.state, inputs)
+    }
+
+    fn backward(
+        &mut self,
+        inputs: &[&Tensor],
+        out_grad: Option<&Tensor>,
+    ) -> Result<(Option<Tensor>, Vec<Tensor>, Option<f32>)> {
+        self.engine.backward_cached(&self.state, inputs, out_grad)
+    }
+
+    fn update(&mut self, grads: &[Tensor], step: i32) -> Result<()> {
+        self.engine.update_cached(&mut self.state, grads, step)
+    }
+
+    fn snapshot(&self) -> StageSnapshot {
+        StageSnapshot {
+            params: self.state.params.clone(),
+            opt_m: self.state.opt_m.clone(),
+            opt_v: self.state.opt_v.clone(),
+        }
+    }
+
+    fn restore(&mut self, snap: &StageSnapshot) -> Result<()> {
+        self.state = self.engine.stage_state_from_parts(
+            &self.state.stage.clone(),
+            snap.params.clone(),
+            snap.opt_m.clone(),
+            snap.opt_v.clone(),
+        )?;
+        Ok(())
+    }
+
+    fn n_params(&self) -> usize {
+        self.state.n_params()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulated stages (pure rust, deterministic)
+// ---------------------------------------------------------------------------
+
+/// Model/config of the simulated pipeline: a residual-tanh LM.
+///
+/// * embed:  `h = W[tokens]`, `W: [vocab, dim]`
+/// * block:  `y = x + tanh(x·A)`, `A: [dim, dim]`
+/// * head:   `loss = CE(softmax(h·U), labels)`, `U: [dim, vocab]`
+#[derive(Debug, Clone)]
+pub struct SimStagesConfig {
+    pub vocab: usize,
+    pub dim: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub n_blocks: usize,
+    pub lr: f32,
+}
+
+impl Default for SimStagesConfig {
+    fn default() -> SimStagesConfig {
+        SimStagesConfig { vocab: 64, dim: 16, batch: 2, seq: 8, n_blocks: 2, lr: 0.01 }
+    }
+}
+
+impl SimStagesConfig {
+    /// Ordered stage names: `embed, block0…blockN-1, head`.
+    pub fn stages(&self) -> Vec<String> {
+        let mut s = vec!["embed".to_string()];
+        s.extend((0..self.n_blocks).map(|i| format!("block{i}")));
+        s.push("head".to_string());
+        s
+    }
+
+    /// A programmatic [`Manifest`] so the trainer reads batch/seq/vocab
+    /// through the same surface it uses for artifact directories.
+    pub fn manifest(&self) -> Manifest {
+        let mut config = std::collections::HashMap::new();
+        config.insert("vocab".to_string(), self.vocab as f64);
+        config.insert("dim".to_string(), self.dim as f64);
+        config.insert("batch".to_string(), self.batch as f64);
+        config.insert("seq".to_string(), self.seq as f64);
+        let mut stage_params = std::collections::HashMap::new();
+        let spec = |name: &str, shape: Vec<usize>| ParamSpec {
+            name: name.to_string(),
+            shape,
+            init: InitKind::Normal { std: 0.02 },
+        };
+        stage_params
+            .insert("embed".to_string(), vec![spec("wte", vec![self.vocab, self.dim])]);
+        for i in 0..self.n_blocks {
+            stage_params
+                .insert(format!("block{i}"), vec![spec("a", vec![self.dim, self.dim])]);
+        }
+        stage_params.insert("head".to_string(), vec![spec("u", vec![self.dim, self.vocab])]);
+        Manifest {
+            preset: "sim".to_string(),
+            config,
+            artifacts: Vec::new(),
+            stage_params,
+            stages: self.stages(),
+        }
+    }
+}
+
+/// Factory for simulated stages.
+pub struct SimStageFactory {
+    pub cfg: SimStagesConfig,
+}
+
+impl StageBackendFactory for SimStageFactory {
+    fn make(&self, stage: &str, stage_idx: usize, seed: u64) -> Result<Box<dyn StageBackend>> {
+        let kind = stage_kind(stage)?;
+        let c = &self.cfg;
+        let mut rng = stage_rng(seed, stage_idx);
+        let shape: &[usize] = match kind {
+            StageKind::Embed => &[c.vocab, c.dim],
+            StageKind::Block => &[c.dim, c.dim],
+            StageKind::Head => &[c.dim, c.vocab],
+        };
+        let params = vec![Tensor::randn(shape, 0.02, &mut rng)];
+        let opt_m = vec![Tensor::zeros(shape)];
+        let opt_v = vec![Tensor::zeros(shape)];
+        Ok(Box::new(SimStageBackend {
+            stage: stage.to_string(),
+            kind,
+            vocab: c.vocab,
+            dim: c.dim,
+            lr: c.lr,
+            params,
+            opt_m,
+            opt_v,
+        }))
+    }
+}
+
+struct SimStageBackend {
+    stage: String,
+    kind: StageKind,
+    vocab: usize,
+    dim: usize,
+    lr: f32,
+    params: Vec<Tensor>,
+    opt_m: Vec<Tensor>,
+    opt_v: Vec<Tensor>,
+}
+
+impl SimStageBackend {
+    fn weight(&self) -> &[f32] {
+        self.params[0].f()
+    }
+
+    /// Rows of an activation tensor `[.., dim]`.
+    fn rows_of(&self, t: &Tensor) -> Result<usize> {
+        if !t.is_f32() {
+            bail!("stage '{}': expected f32 activations, got i32", self.stage);
+        }
+        let numel = t.f().len();
+        if self.dim == 0 || numel % self.dim != 0 {
+            bail!("stage '{}': activation numel {numel} not divisible by dim {}", self.stage, self.dim);
+        }
+        Ok(numel / self.dim)
+    }
+
+    fn token_row(&self, tok: i32) -> Result<usize> {
+        let t = tok as usize;
+        if tok < 0 || t >= self.vocab {
+            bail!("stage '{}': token id {tok} outside vocab {}", self.stage, self.vocab);
+        }
+        Ok(t)
+    }
+
+    fn one(&self, inputs: &[&Tensor], want: usize) -> Result<()> {
+        if inputs.len() != want {
+            bail!("stage '{}' expects {want} input(s), got {}", self.stage, inputs.len());
+        }
+        Ok(())
+    }
+
+    /// logits (row-major `[rows, vocab]`) for the head stage.
+    fn logits(&self, h: &Tensor) -> Result<(Vec<f32>, usize)> {
+        let rows = self.rows_of(h)?;
+        Ok((tensor::matmul(h.f(), self.weight(), rows, self.dim, self.vocab), rows))
+    }
+}
+
+impl StageBackend for SimStageBackend {
+    fn stage(&self) -> &str {
+        &self.stage
+    }
+
+    fn forward(&mut self, inputs: &[&Tensor]) -> Result<Tensor> {
+        match self.kind {
+            StageKind::Embed => {
+                self.one(inputs, 1)?;
+                let tokens = inputs[0];
+                if tokens.is_f32() {
+                    bail!("embed expects i32 token ids");
+                }
+                let toks = tokens.i();
+                let mut out = Vec::with_capacity(toks.len() * self.dim);
+                let w = self.weight();
+                for &t in toks {
+                    let r = self.token_row(t)?;
+                    out.extend_from_slice(&w[r * self.dim..(r + 1) * self.dim]);
+                }
+                let mut shape = tokens.shape().to_vec();
+                shape.push(self.dim);
+                Ok(Tensor::from_vec(&shape, out))
+            }
+            StageKind::Block => {
+                self.one(inputs, 1)?;
+                let x = inputs[0];
+                let rows = self.rows_of(x)?;
+                let mut z = tensor::matmul(x.f(), self.weight(), rows, self.dim, self.dim);
+                for (zi, &xi) in z.iter_mut().zip(x.f()) {
+                    *zi = xi + zi.tanh();
+                }
+                Ok(Tensor::from_vec(x.shape(), z))
+            }
+            StageKind::Head => {
+                self.one(inputs, 2)?;
+                let (logits, rows) = self.logits(inputs[0])?;
+                if inputs[1].is_f32() {
+                    bail!("head expects i32 labels");
+                }
+                let labels = inputs[1].i();
+                if labels.len() != rows {
+                    bail!("head: {} labels for {rows} rows", labels.len());
+                }
+                let mut probs = logits;
+                tensor::softmax_lastaxis(&mut probs, self.vocab);
+                let mut loss = 0.0f64;
+                for (r, &lab) in labels.iter().enumerate() {
+                    let l = self.token_row(lab)?;
+                    loss -= (probs[r * self.vocab + l].max(1e-30) as f64).ln();
+                }
+                Ok(Tensor::scalar((loss / rows as f64) as f32))
+            }
+        }
+    }
+
+    fn backward(
+        &mut self,
+        inputs: &[&Tensor],
+        out_grad: Option<&Tensor>,
+    ) -> Result<(Option<Tensor>, Vec<Tensor>, Option<f32>)> {
+        match self.kind {
+            StageKind::Embed => {
+                self.one(inputs, 1)?;
+                let dh = out_grad
+                    .ok_or_else(|| anyhow!("embed backward requires an upstream gradient"))?;
+                if inputs[0].is_f32() || !dh.is_f32() {
+                    bail!("embed backward expects i32 tokens and f32 dh");
+                }
+                let toks = inputs[0].i();
+                let dhf = dh.f();
+                if dhf.len() != toks.len() * self.dim {
+                    bail!("embed: dh numel {} != tokens {} × dim {}", dhf.len(), toks.len(), self.dim);
+                }
+                let mut dw = vec![0.0f32; self.vocab * self.dim];
+                // Row-ascending accumulation: the only floating-point sum
+                // whose order matters here, fixed for bitwise replay.
+                for (r, &t) in toks.iter().enumerate() {
+                    let row = self.token_row(t)?;
+                    for d in 0..self.dim {
+                        dw[row * self.dim + d] += dhf[r * self.dim + d];
+                    }
+                }
+                Ok((None, vec![Tensor::from_vec(&[self.vocab, self.dim], dw)], None))
+            }
+            StageKind::Block => {
+                self.one(inputs, 1)?;
+                let dy = out_grad
+                    .ok_or_else(|| anyhow!("block backward requires an upstream gradient"))?;
+                let x = inputs[0];
+                let rows = self.rows_of(x)?;
+                if !dy.is_f32() || dy.f().len() != rows * self.dim {
+                    bail!("block: dy must be f32 with {} elements", rows * self.dim);
+                }
+                // Rematerialize z = x·A, then dz = dy ⊙ (1 − tanh²z).
+                let z = tensor::matmul(x.f(), self.weight(), rows, self.dim, self.dim);
+                let mut dz = Vec::with_capacity(z.len());
+                for (&zi, &dyi) in z.iter().zip(dy.f()) {
+                    let th = zi.tanh();
+                    dz.push(dyi * (1.0 - th * th));
+                }
+                // y = x + tanh(x·A): dx = dy + dz·Aᵀ, dA = xᵀ·dz.
+                let mut dx = tensor::matmul_bt(&dz, self.weight(), rows, self.dim, self.dim);
+                for (dxi, &dyi) in dx.iter_mut().zip(dy.f()) {
+                    *dxi += dyi;
+                }
+                let da = tensor::matmul_at(x.f(), &dz, self.dim, rows, self.dim);
+                Ok((
+                    Some(Tensor::from_vec(x.shape(), dx)),
+                    vec![Tensor::from_vec(&[self.dim, self.dim], da)],
+                    None,
+                ))
+            }
+            StageKind::Head => {
+                self.one(inputs, 2)?;
+                let h = inputs[0];
+                let (logits, rows) = self.logits(h)?;
+                if inputs[1].is_f32() {
+                    bail!("head expects i32 labels");
+                }
+                let labels = inputs[1].i();
+                if labels.len() != rows {
+                    bail!("head: {} labels for {rows} rows", labels.len());
+                }
+                let mut probs = logits;
+                tensor::softmax_lastaxis(&mut probs, self.vocab);
+                let mut loss = 0.0f64;
+                for (r, &lab) in labels.iter().enumerate() {
+                    let l = self.token_row(lab)?;
+                    loss -= (probs[r * self.vocab + l].max(1e-30) as f64).ln();
+                }
+                // dlogits = (softmax − onehot) / rows, mean-reduced CE.
+                let inv = 1.0 / rows as f32;
+                for (r, &lab) in labels.iter().enumerate() {
+                    probs[r * self.vocab + lab as usize] -= 1.0;
+                }
+                for p in probs.iter_mut() {
+                    *p *= inv;
+                }
+                let dh = tensor::matmul_bt(&probs, self.weight(), rows, self.vocab, self.dim);
+                let du = tensor::matmul_at(h.f(), &probs, self.dim, rows, self.vocab);
+                Ok((
+                    Some(Tensor::from_vec(h.shape(), dh)),
+                    vec![Tensor::from_vec(&[self.dim, self.vocab], du)],
+                    Some((loss / rows as f64) as f32),
+                ))
+            }
+        }
+    }
+
+    fn update(&mut self, grads: &[Tensor], step: i32) -> Result<()> {
+        if grads.len() != self.params.len() {
+            bail!("stage '{}': {} grads for {} params", self.stage, grads.len(), self.params.len());
+        }
+        // Adam with bias correction from the *passed* step: stateless given
+        // (m, v, step), which is exactly what exact resume needs.
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let b1t = 1.0 - b1.powi(step);
+        let b2t = 1.0 - b2.powi(step);
+        for ((p, g), (m, v)) in self
+            .params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.opt_m.iter_mut().zip(self.opt_v.iter_mut()))
+        {
+            let pf = p.f_mut();
+            let gf = g.f();
+            let mf = m.f_mut();
+            let vf = v.f_mut();
+            for i in 0..pf.len() {
+                mf[i] = b1 * mf[i] + (1.0 - b1) * gf[i];
+                vf[i] = b2 * vf[i] + (1.0 - b2) * gf[i] * gf[i];
+                pf[i] -= self.lr * (mf[i] / b1t) / ((vf[i] / b2t).sqrt() + eps);
+            }
+        }
+        Ok(())
+    }
+
+    fn snapshot(&self) -> StageSnapshot {
+        StageSnapshot {
+            params: self.params.clone(),
+            opt_m: self.opt_m.clone(),
+            opt_v: self.opt_v.clone(),
+        }
+    }
+
+    fn restore(&mut self, snap: &StageSnapshot) -> Result<()> {
+        if snap.params.len() != self.params.len() {
+            bail!("stage '{}': snapshot has {} params, backend {}", self.stage, snap.params.len(), self.params.len());
+        }
+        self.params = snap.params.clone();
+        self.opt_m = snap.opt_m.clone();
+        self.opt_v = snap.opt_v.clone();
+        Ok(())
+    }
+
+    fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimStagesConfig {
+        SimStagesConfig { vocab: 11, dim: 6, batch: 2, seq: 3, n_blocks: 1, lr: 0.01 }
+    }
+
+    fn factory() -> SimStageFactory {
+        SimStageFactory { cfg: cfg() }
+    }
+
+    fn tokens() -> Tensor {
+        Tensor::from_ivec(&[2, 3], vec![1, 4, 7, 2, 0, 10])
+    }
+
+    fn labels() -> Tensor {
+        Tensor::from_ivec(&[2, 3], vec![4, 7, 2, 0, 10, 1])
+    }
+
+    #[test]
+    fn shapes_flow_through_the_pipeline() {
+        let f = factory();
+        let mut embed = f.make("embed", 0, 7).unwrap();
+        let mut block = f.make("block0", 1, 7).unwrap();
+        let mut head = f.make("head", 2, 7).unwrap();
+        let h0 = embed.forward(&[&tokens()]).unwrap();
+        assert_eq!(h0.shape(), &[2, 3, 6]);
+        let h1 = block.forward(&[&h0]).unwrap();
+        assert_eq!(h1.shape(), &[2, 3, 6]);
+        let (dh, du, loss) = head.backward(&[&h1, &labels()], None).unwrap();
+        let dh = dh.unwrap();
+        assert_eq!(dh.shape(), &[2, 3, 6]);
+        assert_eq!(du[0].shape(), &[6, 11]);
+        let loss = loss.unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        // Near-uniform softmax at init: loss ≈ ln(vocab).
+        assert!((loss - (11.0f32).ln()).abs() < 0.1, "loss {loss}");
+        let (dx, da, _) = block.backward(&[&h0], Some(&dh)).unwrap();
+        assert_eq!(dx.as_ref().unwrap().shape(), &[2, 3, 6]);
+        assert_eq!(da[0].shape(), &[6, 6]);
+        let (none, dw, _) = embed.backward(&[&tokens()], dx.as_ref()).unwrap();
+        assert!(none.is_none());
+        assert_eq!(dw[0].shape(), &[11, 6]);
+    }
+
+    #[test]
+    fn bad_inputs_error_not_panic() {
+        let f = factory();
+        let mut embed = f.make("embed", 0, 7).unwrap();
+        assert!(embed.forward(&[&Tensor::from_ivec(&[1], vec![99])]).is_err(), "oov token");
+        let mut head = f.make("head", 2, 7).unwrap();
+        let h = Tensor::zeros(&[2, 3, 6]);
+        assert!(head.backward(&[&h, &Tensor::from_ivec(&[2], vec![0, 1])], None).is_err());
+        let mut block = f.make("block0", 1, 7).unwrap();
+        assert!(block.forward(&[&Tensor::zeros(&[5])]).is_err(), "numel not divisible by dim");
+        assert!(block.backward(&[&h], None).is_err(), "missing out_grad");
+    }
+
+    /// Finite-difference check of every analytic gradient the sim backend
+    /// produces, composed through the full embed→block→head chain.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let f = factory();
+        let mut embed = f.make("embed", 0, 3).unwrap();
+        let mut block = f.make("block0", 1, 3).unwrap();
+        let mut head = f.make("head", 2, 3).unwrap();
+        let toks = tokens();
+        let labs = labels();
+
+        let loss_of = |embed: &mut Box<dyn StageBackend>,
+                       block: &mut Box<dyn StageBackend>,
+                       head: &mut Box<dyn StageBackend>| {
+            let h0 = embed.forward(&[&toks]).unwrap();
+            let h1 = block.forward(&[&h0]).unwrap();
+            head.forward(&[&h1, &labs]).unwrap().item() as f64
+        };
+
+        // Analytic grads.
+        let h0 = embed.forward(&[&toks]).unwrap();
+        let h1 = block.forward(&[&h0]).unwrap();
+        let (dh1, du, _) = head.backward(&[&h1, &labs], None).unwrap();
+        let (dh0, da, _) = block.backward(&[&h0], dh1.as_ref()).unwrap();
+        let (_, dw, _) = embed.backward(&[&toks], dh0.as_ref()).unwrap();
+        let analytic = [(2usize, &du[0]), (1, &da[0]), (0, &dw[0])];
+
+        // FD per parameter tensor, probing a few fixed elements.
+        let eps = 1e-3f32;
+        for (who, grad) in analytic {
+            let n = grad.f().len();
+            for &i in &[0usize, n / 3, n - 1] {
+                let mut probe = |delta: f32| {
+                    let snaps =
+                        [embed.snapshot(), block.snapshot(), head.snapshot()];
+                    let mut s = snaps[who].clone();
+                    s.params[0].f_mut()[i] += delta;
+                    match who {
+                        0 => embed.restore(&s).unwrap(),
+                        1 => block.restore(&s).unwrap(),
+                        _ => head.restore(&s).unwrap(),
+                    }
+                    let l = loss_of(&mut embed, &mut block, &mut head);
+                    match who {
+                        0 => embed.restore(&snaps[0]).unwrap(),
+                        1 => block.restore(&snaps[1]).unwrap(),
+                        _ => head.restore(&snaps[2]).unwrap(),
+                    }
+                    l
+                };
+                let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+                let an = grad.f()[i] as f64;
+                assert!(
+                    (fd - an).abs() < 1e-2 * (1.0 + an.abs()),
+                    "param {who} elem {i}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_replays_bitwise() {
+        let f = factory();
+        let mut head = f.make("head", 2, 9).unwrap();
+        let h = {
+            let mut embed = f.make("embed", 0, 9).unwrap();
+            embed.forward(&[&tokens()]).unwrap()
+        };
+        // Two updates, snapshot, two more, restore, redo: must be bitwise.
+        for step in 1..=2 {
+            let (_, du, _) = head.backward(&[&h, &labels()], None).unwrap();
+            head.update(&du, step).unwrap();
+        }
+        let snap = head.snapshot();
+        for step in 3..=4 {
+            let (_, du, _) = head.backward(&[&h, &labels()], None).unwrap();
+            head.update(&du, step).unwrap();
+        }
+        let end_a = head.snapshot();
+        head.restore(&snap).unwrap();
+        for step in 3..=4 {
+            let (_, du, _) = head.backward(&[&h, &labels()], None).unwrap();
+            head.update(&du, step).unwrap();
+        }
+        assert_eq!(head.snapshot(), end_a, "resume must be exact, not approximate");
+    }
+
+    #[test]
+    fn same_seed_same_backend() {
+        let f = factory();
+        let a = f.make("block0", 1, 42).unwrap().snapshot();
+        let b = f.make("block0", 1, 42).unwrap().snapshot();
+        assert_eq!(a, b);
+        let c = f.make("block0", 1, 43).unwrap().snapshot();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let f = factory();
+        let mut embed = f.make("embed", 0, 5).unwrap();
+        let mut block = f.make("block0", 1, 5).unwrap();
+        let mut head = f.make("head", 2, 5).unwrap();
+        let toks = tokens();
+        let labs = labels();
+        let mut first = None;
+        let mut last = 0.0f32;
+        for step in 1..=30 {
+            let h0 = embed.forward(&[&toks]).unwrap();
+            let h1 = block.forward(&[&h0]).unwrap();
+            let (dh1, du, loss) = head.backward(&[&h1, &labs], None).unwrap();
+            let (dh0, da, _) = block.backward(&[&h0], dh1.as_ref()).unwrap();
+            let (_, dw, _) = embed.backward(&[&toks], dh0.as_ref()).unwrap();
+            head.update(&du, step).unwrap();
+            block.update(&da, step).unwrap();
+            embed.update(&dw, step).unwrap();
+            last = loss.unwrap();
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap() - 0.1, "loss {first:?} -> {last}");
+    }
+
+    #[test]
+    fn sim_manifest_mirrors_config() {
+        let m = cfg().manifest();
+        assert_eq!(m.stages, vec!["embed", "block0", "head"]);
+        assert_eq!(m.config_usize("batch"), Some(2));
+        assert_eq!(m.config_usize("seq"), Some(3));
+        assert_eq!(m.config_usize("vocab"), Some(11));
+        assert_eq!(m.stage_params["head"][0].shape, vec![6, 11]);
+    }
+}

@@ -1,37 +1,71 @@
-//! The live pipeline trainer: decentralized GPipe training over XLA/PJRT
-//! artifacts (the end-to-end production path).
+//! The live pipeline trainer: decentralized GPipe training under a
+//! supervising coordinator (the end-to-end production path).
 //!
-//! One OS thread per pipeline-stage compnode, each with a **private PJRT
-//! runtime** (PJRT objects are not `Send`) holding only its stage's
-//! artifacts and parameters — exactly the paper's picture of a sub-DAG per
-//! compnode. Activations and gradients move over channels whose payloads
-//! pay α-β WAN delays on the [`NetworkSim`] clock and can be compressed
-//! with a [`Codec`] (§2.3). Tokens and labels come from the DHT data
-//! provider (§3.9). Backward rematerializes forward inside the artifact,
-//! so only stage *inputs* are stashed per microbatch (§2.4).
+//! One OS thread per pipeline-stage compnode, each owning a private
+//! [`StageBackend`] (PJRT artifacts in production — PJRT objects are not
+//! `Send` — or the deterministic host simulator in tests). Activations and
+//! gradients move over channels whose payloads pay α-β WAN delays on the
+//! [`NetworkSim`] clock and can be compressed with a [`Codec`] (§2.3).
+//! Tokens and labels come from the DHT data provider (§3.9); the provider
+//! publishes every step up front, so a replayed step refetches identical
+//! data. Backward rematerializes forward inside the backend, so only stage
+//! *inputs* are stashed per microbatch (§2.4).
+//!
+//! # Supervision & recovery (paper §3.2/§3.5)
+//!
+//! The coordinator owns every stage thread's lifecycle. Stage health flows
+//! back on a single event channel — heartbeats piggybacked on the loss and
+//! snapshot traffic plus explicit ticks while a stage waits on a hop — and
+//! the coordinator mirrors them into a [`Broker`], whose liveness sweep is
+//! the arbiter of "dead". Every blocking receive in the pipeline is a
+//! `recv_timeout` loop that watches an abort flag, so no failure path can
+//! leave a thread parked on an unbounded `recv`.
+//!
+//! On failure the coordinator tears the attempt down (abort flag + join
+//! *all* threads, aggregating every stage's error), deregisters the failed
+//! stage's broker node, promotes a replacement from the backup pool, and
+//! replays from the last step-boundary v2 checkpoint (params + Adam
+//! moments + step counter — see [`checkpoint`]). Replay is *exact*: data is
+//! refetched from the DHT, per-channel FIFO fixes the gradient accumulation
+//! order, and Adam bias correction is driven by the explicit step counter,
+//! so a recovered run's losses are bitwise-identical to an uninterrupted
+//! one (asserted by `tests/integration_recovery.rs`).
+//!
+//! Deterministic fault injection ([`FaultPlan`]) is threaded through
+//! [`TrainConfig::faults`] so every one of these paths is exercised in CI.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::compress::Codec;
+use crate::broker::{Broker, Event, NodeClass, NodeState};
+use crate::cluster::checkpoint::{self, CheckpointV2, StageSnapshot};
 use crate::cluster::data::{fetch_tokens, DataProvider, SyntheticCorpus};
+use crate::cluster::faults::{FaultPlan, HopFault};
+use crate::cluster::stage_backend::{StageBackend, StageBackendFactory, XlaStageFactory};
+use crate::compress::Codec;
 use crate::dht::Dht;
-use crate::exec::xla_engine::XlaEngine;
-use crate::metrics::LossCurve;
+use crate::metrics::{LossCurve, Metrics};
 use crate::net::{NetworkSim, Topology};
 use crate::perf::comm::LinkModel;
+use crate::perf::gpus::GPU_DB;
 use crate::runtime::Manifest;
 use crate::tensor::Tensor;
-use crate::util::Rng;
+
+/// Error text of a worker that exited because the supervisor tore the
+/// attempt down (not a root-cause failure; filtered out of aggregation).
+const ABORTED: &str = "aborted by supervisor";
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
-    /// Artifact directory (e.g. `artifacts/gpt-e2e`).
+    /// Artifact directory (e.g. `artifacts/gpt-e2e`). Also where
+    /// checkpoints land, so sim-backend runs need a writable dir too.
     pub artifacts_dir: PathBuf,
     pub steps: usize,
     pub microbatches: usize,
@@ -49,6 +83,23 @@ pub struct TrainConfig {
     /// Row-partition fan-out for the host GEMMs (1 = single-threaded).
     /// Results are bitwise-independent of this value.
     pub gemm_threads: usize,
+    /// Write a v2 recovery checkpoint every N steps (0 = final step only).
+    pub ckpt_every: usize,
+    /// Broker liveness: seconds without a stage heartbeat before the node
+    /// is declared dead. Generous by default — artifact compilation on
+    /// spawn can be slow.
+    pub heartbeat_timeout_s: f64,
+    /// Max seconds a stage waits on one activation/gradient hop before it
+    /// reports the peer as hung.
+    pub hop_timeout_s: f64,
+    /// How many supervised restarts to attempt before giving up.
+    pub max_recoveries: usize,
+    /// Size of the broker's standby pool (each recovery consumes one).
+    pub backup_nodes: usize,
+    /// Base backoff before a restart; doubles per recovery.
+    pub recovery_backoff_ms: u64,
+    /// Deterministic fault injection (None in production).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl TrainConfig {
@@ -64,6 +115,13 @@ impl TrainConfig {
             log_every: 10,
             save_checkpoint: true,
             gemm_threads: 1,
+            ckpt_every: 10,
+            heartbeat_timeout_s: 60.0,
+            hop_timeout_s: 30.0,
+            max_recoveries: 2,
+            backup_nodes: 2,
+            recovery_backoff_ms: 50,
+            faults: None,
         }
     }
 }
@@ -79,6 +137,16 @@ pub struct TrainReport {
     pub comm_bytes: u64,
     /// Modelled WAN seconds (virtual).
     pub comm_model_seconds: f64,
+    /// Supervised restarts that were needed to finish.
+    pub recoveries: usize,
+    /// Root-cause stage failures observed across all attempts.
+    pub stage_failures: usize,
+    /// v2 recovery checkpoints written.
+    pub checkpoints_written: usize,
+    /// Messages lost in flight (fault injection).
+    pub messages_dropped: u64,
+    /// The broker's event log (registrations, deaths, promotions).
+    pub broker_events: Vec<Event>,
 }
 
 /// A tensor on the wire.
@@ -87,14 +155,32 @@ struct WireMsg {
     tensor: Tensor,
 }
 
-/// Send one activation/gradient hop: pays the WAN delay and (optionally)
+/// Everything a stage reports to the coordinator rides one channel, so
+/// every message doubles as a liveness signal.
+enum StageEvent {
+    /// "Still alive" — sent on spawn and while waiting on a hop.
+    Heartbeat { stage: usize },
+    /// Per-step mean loss (head stage only).
+    Loss { step: usize, loss: f32 },
+    /// Step-boundary training state; `step` counts *completed* steps.
+    Snapshot { stage: usize, step: u64, snap: StageSnapshot },
+    Done { stage: usize },
+    Failed { stage: usize, error: String },
+}
+
+/// Send one activation/gradient hop: pays the WAN delay, (optionally)
 /// round-trips the payload through the codec so the numeric effect of
-/// compression is real, not just accounted.
+/// compression is real, and consults the fault plan — an armed drop burns
+/// the transfer and never delivers, letting the receiver's hop timeout
+/// exercise the recovery path.
+#[allow(clippy::too_many_arguments)]
 fn send_hop(
     net: &NetworkSim,
     from: usize,
     to: usize,
+    step: usize,
     codec: Option<Codec>,
+    faults: Option<&FaultPlan>,
     tx: &Sender<WireMsg>,
     mb: usize,
     tensor: Tensor,
@@ -113,6 +199,20 @@ fn send_hop(
             (decoded, bytes)
         }
     };
+    if let Some(f) = faults {
+        match f.fire_hop(from, to, step) {
+            Some(HopFault::Drop) => {
+                net.drop_message(from, to, wire_bytes);
+                log::warn!("injected fault: dropped {from}->{to} hop at step {step}");
+                return Ok(());
+            }
+            Some(HopFault::DelayMs(ms)) => {
+                log::warn!("injected fault: delaying {from}->{to} hop at step {step} by {ms}ms");
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            None => {}
+        }
+    }
     net.transfer(from, to, wire_bytes);
     tx.send(WireMsg { mb, tensor: payload }).map_err(|_| anyhow!("pipeline channel closed"))
 }
@@ -121,48 +221,204 @@ fn send_hop(
 pub struct PipelineTrainer {
     pub config: TrainConfig,
     pub manifest: Manifest,
+    /// Recovery/supervision counters and gauges, live during `run()`.
+    pub metrics: Arc<Metrics>,
+    factory: Arc<dyn StageBackendFactory>,
 }
 
 impl PipelineTrainer {
-    /// Load the manifest (cheap) and validate the configuration.
+    /// Production constructor: loads the artifact manifest (cheap) and
+    /// trains through per-stage `XlaEngine`s.
     pub fn new(config: TrainConfig) -> Result<PipelineTrainer> {
         let manifest = Manifest::load(&config.artifacts_dir.join("manifest.json"))
             .context("loading artifact manifest (run `make artifacts` first)")?;
-        if manifest.stages.len() < 2 {
-            return Err(anyhow!("need ≥2 stages, manifest has {}", manifest.stages.len()));
-        }
-        Ok(PipelineTrainer { config, manifest })
+        let factory = Arc::new(XlaStageFactory { dir: config.artifacts_dir.clone() });
+        PipelineTrainer::with_backend(config, manifest, factory)
     }
 
-    /// Run the full training loop. Spawns one thread per stage; blocks
-    /// until all steps complete.
+    /// Train an arbitrary backend (the fault-injection tests drive the
+    /// whole supervisor with `SimStageFactory`, no artifacts needed).
+    pub fn with_backend(
+        config: TrainConfig,
+        manifest: Manifest,
+        factory: Arc<dyn StageBackendFactory>,
+    ) -> Result<PipelineTrainer> {
+        if manifest.stages.len() < 2 {
+            bail!("need ≥2 stages, manifest has {}", manifest.stages.len());
+        }
+        Ok(PipelineTrainer { config, manifest, metrics: Arc::new(Metrics::new()), factory })
+    }
+
+    /// Run the full training loop under supervision. Blocks until all steps
+    /// complete or the recovery budget is exhausted.
     pub fn run(&self) -> Result<TrainReport> {
         let cfg = &self.config;
         crate::tensor::set_gemm_threads(cfg.gemm_threads);
         let stages = self.manifest.stages.clone();
         let n_stages = stages.len();
-        let batch = self.manifest.config_usize("batch").ok_or_else(|| anyhow!("manifest missing batch"))?;
-        let seq = self.manifest.config_usize("seq").ok_or_else(|| anyhow!("manifest missing seq"))?;
-        let vocab = self.manifest.config_usize("vocab").ok_or_else(|| anyhow!("manifest missing vocab"))?;
+        let batch = self
+            .manifest
+            .config_usize("batch")
+            .ok_or_else(|| anyhow!("manifest missing batch"))?;
+        let seq =
+            self.manifest.config_usize("seq").ok_or_else(|| anyhow!("manifest missing seq"))?;
+        let vocab = self
+            .manifest
+            .config_usize("vocab")
+            .ok_or_else(|| anyhow!("manifest missing vocab"))?;
 
-        // DHT with one storage peer per stage + provider replication 2.
+        // DHT with one storage peer per stage + provider replication 2. All
+        // steps are published up front and never retired during the run, so
+        // replayed steps fetch bitwise-identical batches.
         let mut dht = Dht::new(2);
         for p in 0..n_stages.max(2) {
             dht.join(p).unwrap();
         }
         let dht = Arc::new(Mutex::new(dht));
-        let provider =
-            DataProvider::new(SyntheticCorpus::new(vocab, seq, batch), dht.clone());
+        let provider = DataProvider::new(SyntheticCorpus::new(vocab, seq, batch), dht.clone());
         for step in 0..cfg.steps {
             provider.publish_step(step, cfg.microbatches)?;
         }
 
         let net = Arc::new(NetworkSim::new(Topology::uniform(cfg.link), cfg.time_scale));
 
+        // Broker bookkeeping: one active node per stage plus the standby
+        // pool the paper's §3.2 recovery story draws replacements from.
+        let mut broker = Broker::new(cfg.heartbeat_timeout_s);
+        let node_of_stage: Vec<usize> = (0..n_stages)
+            .map(|si| {
+                broker.register(&GPU_DB[si % GPU_DB.len()], 1.0, NodeClass::Supernode, 0.0, false)
+            })
+            .collect();
+        for b in 0..cfg.backup_nodes {
+            broker.register(
+                &GPU_DB[(n_stages + b) % GPU_DB.len()],
+                1.0,
+                NodeClass::Antnode,
+                0.0,
+                true,
+            );
+        }
+
+        let ckpt_path = checkpoint::recovery_path(&cfg.artifacts_dir);
+        // A stale recovery file from an earlier run must not leak into this
+        // one's replay decisions.
+        let _ = std::fs::remove_file(&ckpt_path);
+        let _ = std::fs::remove_file(checkpoint::prev_path(&ckpt_path));
+        if let Some(dir) = ckpt_path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+
+        let mut sup = Supervisor {
+            cfg,
+            factory: self.factory.clone(),
+            metrics: self.metrics.clone(),
+            stages,
+            batch,
+            seq,
+            net: net.clone(),
+            dht,
+            broker,
+            node_of_stage,
+            ckpt_path,
+            t0: Instant::now(),
+            losses: BTreeMap::new(),
+            pending_snaps: BTreeMap::new(),
+            final_snaps: None,
+            recoveries: 0,
+            stage_failures: 0,
+            ckpts_written: 0,
+        };
+
+        let mut start_step = 0usize;
+        let mut restore: Option<CheckpointV2> = None;
+        loop {
+            match sup.run_attempt(start_step, restore.as_ref())? {
+                AttemptOutcome::Finished => break,
+                AttemptOutcome::Failed(failures) => {
+                    (start_step, restore) = sup.plan_recovery(failures)?;
+                }
+            }
+        }
+
+        if cfg.save_checkpoint {
+            sup.publish_final_checkpoint()?;
+        }
+        let broker_events = std::mem::take(&mut sup.broker.events);
+        let wall = sup.t0.elapsed().as_secs_f64();
+        let tokens = (cfg.steps * cfg.microbatches * batch * seq) as f64;
+        let mut losses = LossCurve::new();
+        for (&step, &loss) in &sup.losses {
+            losses.record(step, loss);
+        }
+        Ok(TrainReport {
+            losses,
+            steps: cfg.steps,
+            wall_seconds: wall,
+            tokens_per_second: tokens / wall,
+            comm_bytes: net.total_remote_bytes(),
+            comm_model_seconds: net.total_remote_seconds(),
+            recoveries: sup.recoveries,
+            stage_failures: sup.stage_failures,
+            checkpoints_written: sup.ckpts_written,
+            messages_dropped: net.total_dropped(),
+            broker_events,
+        })
+    }
+}
+
+enum AttemptOutcome {
+    Finished,
+    /// Root-cause failures, `(stage index, error)`, in arrival order.
+    Failed(Vec<(usize, String)>),
+}
+
+/// The coordinator: owns the broker mirror, the checkpoint assembly and
+/// the per-attempt thread lifecycle.
+struct Supervisor<'a> {
+    cfg: &'a TrainConfig,
+    factory: Arc<dyn StageBackendFactory>,
+    metrics: Arc<Metrics>,
+    stages: Vec<String>,
+    batch: usize,
+    seq: usize,
+    net: Arc<NetworkSim>,
+    dht: Arc<Mutex<Dht>>,
+    broker: Broker,
+    /// Stage index → broker node currently hosting it (rewired on
+    /// backup promotion).
+    node_of_stage: Vec<usize>,
+    ckpt_path: PathBuf,
+    t0: Instant,
+    /// Per-step losses; replays overwrite with bitwise-identical values.
+    losses: BTreeMap<usize, f32>,
+    /// Step → stage → snapshot, assembled until all stages report.
+    pending_snaps: BTreeMap<u64, BTreeMap<usize, StageSnapshot>>,
+    /// The last fully-assembled snapshot set (for the final v1 bridge).
+    final_snaps: Option<(u64, BTreeMap<usize, StageSnapshot>)>,
+    recoveries: usize,
+    stage_failures: usize,
+    ckpts_written: usize,
+}
+
+impl Supervisor<'_> {
+    /// One supervised attempt: spawn all stages at `start_step`, pump
+    /// events until every stage is done or something fails, then join
+    /// *every* thread and aggregate their results.
+    fn run_attempt(
+        &mut self,
+        start_step: usize,
+        restore: Option<&CheckpointV2>,
+    ) -> Result<AttemptOutcome> {
+        let cfg = self.cfg;
+        let n_stages = self.stages.len();
+
         // Channels, one slot per stage: stage i sends activations forward
         // on act_txs[i] (received by i+1 on act_rxs[i+1]) and gradients
         // backward on grad_txs[i] (received by i-1 on grad_rxs[i-1]). The
-        // pipeline ends leave the unused slots None.
+        // pipeline ends leave the unused slots None. Fresh channels per
+        // attempt: messages from a torn-down step die with them.
         let mut act_txs: Vec<Option<Sender<WireMsg>>> = (0..n_stages).map(|_| None).collect();
         let mut act_rxs: Vec<Option<Receiver<WireMsg>>> = (0..n_stages).map(|_| None).collect();
         let mut grad_txs: Vec<Option<Sender<WireMsg>>> = (0..n_stages).map(|_| None).collect();
@@ -175,228 +431,509 @@ impl PipelineTrainer {
             grad_txs[i + 1] = Some(tx);
             grad_rxs[i] = Some(rx);
         }
+        let (ev_tx, ev_rx) = channel::<StageEvent>();
+        let abort = Arc::new(AtomicBool::new(false));
 
-        let (loss_tx, loss_rx) = channel::<(usize, f32)>();
-        let (ckpt_tx, ckpt_rx) = channel::<(String, Vec<Tensor>)>();
-
-        let t0 = Instant::now();
-        let mut handles = Vec::new();
-        for (si, stage) in stages.iter().enumerate() {
-            let stage = stage.clone();
-            let dir = cfg.artifacts_dir.clone();
-            let steps = cfg.steps;
-            let microbatches = cfg.microbatches;
-            let codec = cfg.codec;
-            let net = net.clone();
-            let dht = dht.clone();
-            let seed = cfg.seed;
-            let act_rx = act_rxs[si].take();
-            let act_tx = act_txs[si].take();
-            let grad_rx = grad_rxs[si].take();
-            let grad_tx = grad_txs[si].take();
-            let loss_tx = if si == n_stages - 1 { Some(loss_tx.clone()) } else { None };
-            let ckpt_tx = ckpt_tx.clone();
-            let is_first = si == 0;
-            let is_last = si == n_stages - 1;
+        let mut handles = Vec::with_capacity(n_stages);
+        for (si, stage) in self.stages.iter().enumerate() {
+            let ctx = StageCtx {
+                stage: stage.clone(),
+                stage_idx: si,
+                factory: self.factory.clone(),
+                start_step,
+                steps: cfg.steps,
+                microbatches: cfg.microbatches,
+                batch: self.batch,
+                seq: self.seq,
+                ckpt_every: cfg.ckpt_every,
+                hop_timeout: Duration::from_secs_f64(cfg.hop_timeout_s.max(0.001)),
+                codec: cfg.codec,
+                net: self.net.clone(),
+                dht: self.dht.clone(),
+                seed: cfg.seed,
+                restore: restore.and_then(|c| c.stages.get(stage).cloned()),
+                faults: cfg.faults.clone(),
+                abort: abort.clone(),
+                act_rx: act_rxs[si].take(),
+                act_tx: act_txs[si].take(),
+                grad_rx: grad_rxs[si].take(),
+                grad_tx: grad_txs[si].take(),
+                events: ev_tx.clone(),
+                is_first: si == 0,
+                is_last: si == n_stages - 1,
+            };
+            let events = ev_tx.clone();
+            let abort_flag = abort.clone();
             handles.push(std::thread::spawn(move || -> Result<()> {
-                let result = stage_worker(StageCtx {
-                    stage,
-                    stage_idx: si,
-                    dir,
-                    steps,
-                    microbatches,
-                    batch,
-                    seq,
-                    codec,
-                    net,
-                    dht,
-                    seed,
-                    act_rx,
-                    act_tx,
-                    grad_rx,
-                    grad_tx,
-                    loss_tx,
-                    ckpt_tx: Some(ckpt_tx),
-                    is_first,
-                    is_last,
-                });
+                let result = stage_worker(ctx);
                 if let Err(e) = &result {
-                    eprintln!("stage {si} worker failed: {e:#}");
+                    let msg = format!("{e:#}");
+                    if !abort_flag.load(Ordering::SeqCst) && !msg.contains(ABORTED) {
+                        log::warn!("stage {si} worker failed: {msg}");
+                        let _ = events.send(StageEvent::Failed { stage: si, error: msg });
+                    }
                 }
                 result
             }));
         }
-        drop(loss_tx);
-        drop(ckpt_tx);
+        drop(ev_tx);
 
-        // Collect per-step losses, logging progress every `log_every`.
-        let mut losses = LossCurve::new();
-        while let Ok((step, loss)) = loss_rx.recv() {
-            if cfg.log_every > 0 && step % cfg.log_every == 0 {
-                log::info!("step {step}: loss {loss:.4}");
-                eprintln!("  [train] step {step:>5}  loss {loss:.4}");
+        // Event pump: drain stage traffic, mirror liveness into the broker,
+        // sweep for silent deaths. recv_timeout keeps the sweep running
+        // even when every stage is stuck.
+        let mut done = vec![false; n_stages];
+        let mut failures: Vec<(usize, String)> = Vec::new();
+        let poll = Duration::from_millis(25);
+        while !done.iter().all(|&d| d) && failures.is_empty() {
+            match ev_rx.recv_timeout(poll) {
+                Ok(ev) => self.absorb(ev, &mut done, &mut failures)?,
+                Err(RecvTimeoutError::Timeout) => {}
+                // Every worker exited (all senders dropped) — results are
+                // in the join handles below.
+                Err(RecvTimeoutError::Disconnected) => break,
             }
-            losses.record(step, loss);
-        }
-        for h in handles {
-            h.join().map_err(|_| anyhow!("stage thread panicked"))??;
-        }
-        if cfg.save_checkpoint {
-            let mut ckpt = crate::cluster::checkpoint::Checkpoint::new();
-            while let Ok((stage, params)) = ckpt_rx.try_recv() {
-                ckpt.insert(stage, params);
+            let now = self.t0.elapsed().as_secs_f64();
+            // The standby pool is healthy by definition while unpromoted —
+            // without these ticks the broker's sweep would expire it.
+            for b in self.broker.backup_pool() {
+                let _ = self.broker.heartbeat(b, now);
             }
-            if ckpt.len() == n_stages {
-                let path = crate::cluster::checkpoint::default_path(&cfg.artifacts_dir);
-                crate::cluster::checkpoint::save(&path, &ckpt)?;
-                log::info!("checkpoint written to {}", path.display());
+            for node in self.broker.check_liveness(now) {
+                if let Some(si) = self.node_of_stage.iter().position(|&n| n == node) {
+                    failures.push((si, "missed heartbeats (liveness timeout)".to_string()));
+                    self.metrics.inc("train.liveness_expirations", 1);
+                }
             }
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let tokens = (cfg.steps * cfg.microbatches * batch * seq) as f64;
-        Ok(TrainReport {
-            losses,
-            steps: cfg.steps,
-            wall_seconds: wall,
-            tokens_per_second: tokens / wall,
-            comm_bytes: net.total_remote_bytes(),
-            comm_model_seconds: net.total_remote_seconds(),
-        })
+
+        // Tear down: every surviving thread sees the flag at its next hop
+        // poll or step boundary. Then join ALL of them — first error must
+        // not detach the rest — aggregating every root-cause failure. Once
+        // we initiated the abort, peer errors (closed channels, hop
+        // timeouts) are collateral of the teardown, not new root causes.
+        let teardown = !failures.is_empty();
+        if teardown {
+            abort.store(true, Ordering::SeqCst);
+        }
+        for (si, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    let msg = format!("{e:#}");
+                    if !teardown
+                        && !msg.contains(ABORTED)
+                        && !failures.iter().any(|(s, _)| *s == si)
+                    {
+                        failures.push((si, msg));
+                    }
+                }
+                // A panic is always a real failure, teardown or not.
+                Err(_) => {
+                    if !failures.iter().any(|(s, _)| *s == si) {
+                        failures.push((si, "worker thread panicked".to_string()));
+                    }
+                }
+            }
+        }
+        // Late events (snapshots finished just before a peer died) still
+        // count toward checkpoint assembly.
+        while let Ok(ev) = ev_rx.try_recv() {
+            self.absorb(ev, &mut done, &mut failures)?;
+        }
+
+        if failures.is_empty() && done.iter().all(|&d| d) {
+            Ok(AttemptOutcome::Finished)
+        } else if failures.is_empty() {
+            // Threads exited cleanly but not every stage reported Done —
+            // defensive; should be unreachable.
+            let missing: Vec<&str> = (0..n_stages)
+                .filter(|&si| !done[si])
+                .map(|si| self.stages[si].as_str())
+                .collect();
+            bail!("stages [{}] exited without completing", missing.join(", "));
+        } else {
+            Ok(AttemptOutcome::Failed(failures))
+        }
+    }
+
+    /// Fold one stage event into supervisor state. Every event refreshes
+    /// the sender's broker heartbeat.
+    fn absorb(
+        &mut self,
+        ev: StageEvent,
+        done: &mut [bool],
+        failures: &mut Vec<(usize, String)>,
+    ) -> Result<()> {
+        let now = self.t0.elapsed().as_secs_f64();
+        match ev {
+            StageEvent::Heartbeat { stage } => {
+                let _ = self.broker.heartbeat(self.node_of_stage[stage], now);
+            }
+            StageEvent::Loss { step, loss } => {
+                let _ = self.broker.heartbeat(self.node_of_stage[self.stages.len() - 1], now);
+                if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                    log::info!("step {step}: loss {loss:.4}");
+                    eprintln!("  [train] step {step:>5}  loss {loss:.4}");
+                }
+                self.losses.insert(step, loss);
+            }
+            StageEvent::Snapshot { stage, step, snap } => {
+                let _ = self.broker.heartbeat(self.node_of_stage[stage], now);
+                let set = self.pending_snaps.entry(step).or_default();
+                set.insert(stage, snap);
+                if set.len() == self.stages.len() {
+                    let set = self.pending_snaps.remove(&step).unwrap();
+                    self.write_recovery_checkpoint(step, &set)?;
+                    // Older boundaries can never complete once a newer one
+                    // has; drop the stale partial sets.
+                    self.pending_snaps.retain(|&s, _| s > step);
+                    self.final_snaps = Some((step, set));
+                }
+            }
+            StageEvent::Done { stage } => done[stage] = true,
+            StageEvent::Failed { stage, error } => {
+                if !failures.iter().any(|(s, _)| *s == stage) {
+                    failures.push((stage, error));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the assembled step-boundary state as a rotating v2 checkpoint,
+    /// then give an armed truncate fault its chance to corrupt it.
+    fn write_recovery_checkpoint(
+        &mut self,
+        step: u64,
+        set: &BTreeMap<usize, StageSnapshot>,
+    ) -> Result<()> {
+        let ckpt = CheckpointV2 {
+            step,
+            stages: set
+                .iter()
+                .map(|(&si, snap)| (self.stages[si].clone(), snap.clone()))
+                .collect(),
+        };
+        checkpoint::save_v2_rotating(&self.ckpt_path, &ckpt)
+            .with_context(|| format!("writing recovery checkpoint at step {step}"))?;
+        self.ckpts_written += 1;
+        self.metrics.inc("train.checkpoints_written", 1);
+        self.metrics.set_gauge("train.last_checkpoint_step", step as f64);
+        if let Some(f) = &self.cfg.faults {
+            if let Some(keep) = f.fire_truncate(step as usize) {
+                let bytes = std::fs::read(&self.ckpt_path)?;
+                let keep = (keep as usize).min(bytes.len());
+                std::fs::write(&self.ckpt_path, &bytes[..keep])?;
+                log::warn!("injected fault: truncated step-{step} checkpoint to {keep} bytes");
+            }
+        }
+        Ok(())
+    }
+
+    /// Decide how to restart after a failed attempt: broker bookkeeping
+    /// (deregister the root-cause node, promote a backup), exponential
+    /// backoff, then reload the newest readable recovery checkpoint.
+    /// Returns `(start_step, restore)` for the next attempt.
+    fn plan_recovery(
+        &mut self,
+        failures: Vec<(usize, String)>,
+    ) -> Result<(usize, Option<CheckpointV2>)> {
+        self.stage_failures += failures.len();
+        self.metrics.inc("train.stage_failures", failures.len() as u64);
+        let desc: Vec<String> = failures
+            .iter()
+            .map(|(si, e)| format!("stage {si} ({}): {e}", self.stages[*si]))
+            .collect();
+        let desc = desc.join("; ");
+        if self.recoveries >= self.cfg.max_recoveries {
+            bail!(
+                "pipeline failed after {} recover{}: {desc}",
+                self.recoveries,
+                if self.recoveries == 1 { "y" } else { "ies" }
+            );
+        }
+
+        // The first reported failure is the root cause (peers that died of
+        // closed channels / aborts were filtered); its node leaves the
+        // cluster and a standby takes over the stage.
+        let (primary, _) = failures[0];
+        let node = self.node_of_stage[primary];
+        if self.broker.state(node) != Some(NodeState::Offline) {
+            self.broker.deregister(node);
+        }
+        let replacement = self.broker.promote_backup(node).ok_or_else(|| {
+            anyhow!("backup pool exhausted while replacing stage {primary}: {desc}")
+        })?;
+        self.node_of_stage[primary] = replacement;
+        let _ = self.broker.heartbeat(replacement, self.t0.elapsed().as_secs_f64());
+        self.recoveries += 1;
+        self.metrics.inc("train.recoveries", 1);
+
+        let backoff = self.cfg.recovery_backoff_ms << (self.recoveries - 1).min(6);
+        self.metrics.observe("train.recovery_backoff_ms", backoff as f64);
+        if backoff > 0 {
+            std::thread::sleep(Duration::from_millis(backoff));
+        }
+
+        // Newest readable generation wins; a truncated newest falls back to
+        // `.prev`; nothing readable restarts from scratch (same seed ⇒ same
+        // init ⇒ still deterministic).
+        let (latest, unreadable) = checkpoint::load_latest_v2(&self.ckpt_path);
+        self.metrics.inc("train.checkpoint_load_failures", unreadable);
+        let (start_step, restore) = match latest {
+            Some(ck) => {
+                let s = ck.step as usize;
+                (s, Some(ck))
+            }
+            None => (0, None),
+        };
+        // Replayed steps regenerate their losses and snapshots bitwise;
+        // drop what the failed attempt produced past the restore point.
+        self.losses.retain(|&s, _| s < start_step);
+        self.pending_snaps.clear();
+        log::warn!(
+            "supervisor: recovery #{} — {desc}; node {node} → backup {replacement}, \
+             replaying from step {start_step}",
+            self.recoveries
+        );
+        eprintln!(
+            "  [train] recovery #{}: {desc}; replaying from step {start_step}",
+            self.recoveries
+        );
+        Ok((start_step, restore))
+    }
+
+    /// Bridge to `serve`: write the final parameters as a v1 checkpoint.
+    /// An incomplete set is an error naming every absent stage — never a
+    /// silent skip.
+    fn publish_final_checkpoint(&self) -> Result<()> {
+        let (step, set) = self
+            .final_snaps
+            .as_ref()
+            .ok_or_else(|| anyhow!("training finished but no complete snapshot set arrived"))?;
+        if *step != self.cfg.steps as u64 || set.len() != self.stages.len() {
+            let missing: Vec<&str> = (0..self.stages.len())
+                .filter(|si| !set.contains_key(si))
+                .map(|&si| self.stages[si].as_str())
+                .collect();
+            bail!(
+                "final checkpoint incomplete: have step {step}/{} with {}/{} stages \
+                 (missing [{}])",
+                self.cfg.steps,
+                set.len(),
+                self.stages.len(),
+                missing.join(", ")
+            );
+        }
+        let ckpt: checkpoint::Checkpoint = set
+            .iter()
+            .map(|(&si, snap)| (self.stages[si].clone(), snap.params.clone()))
+            .collect();
+        let path = checkpoint::default_path(&self.cfg.artifacts_dir);
+        checkpoint::save(&path, &ckpt)?;
+        log::info!("checkpoint written to {}", path.display());
+        Ok(())
     }
 }
 
 struct StageCtx {
     stage: String,
     stage_idx: usize,
-    dir: PathBuf,
+    factory: Arc<dyn StageBackendFactory>,
+    start_step: usize,
     steps: usize,
     microbatches: usize,
     batch: usize,
     seq: usize,
+    ckpt_every: usize,
+    hop_timeout: Duration,
     codec: Option<Codec>,
     net: Arc<NetworkSim>,
     dht: Arc<Mutex<Dht>>,
     seed: u64,
+    restore: Option<StageSnapshot>,
+    faults: Option<Arc<FaultPlan>>,
+    abort: Arc<AtomicBool>,
     act_rx: Option<Receiver<WireMsg>>,
     act_tx: Option<Sender<WireMsg>>,
     grad_rx: Option<Receiver<WireMsg>>,
     grad_tx: Option<Sender<WireMsg>>,
-    loss_tx: Option<Sender<(usize, f32)>>,
-    ckpt_tx: Option<Sender<(String, Vec<Tensor>)>>,
+    events: Sender<StageEvent>,
     is_first: bool,
     is_last: bool,
 }
 
-/// One compnode's whole life: load artifacts, init params, run the GPipe
-/// schedule for every step.
+impl StageCtx {
+    fn check_abort(&self) -> Result<()> {
+        if self.abort.load(Ordering::SeqCst) {
+            bail!("{ABORTED}");
+        }
+        Ok(())
+    }
+
+    /// Bounded receive: polls so the abort flag is honored within ~25ms,
+    /// heartbeats the coordinator every tick (a stage waiting on a slow
+    /// peer is alive, not dead), and gives up after `hop_timeout` — the
+    /// unbounded `recv` this replaces could hang the pipeline forever on a
+    /// dead peer.
+    fn recv_hop(&self, rx: &Receiver<WireMsg>, what: &str) -> Result<WireMsg> {
+        let poll = Duration::from_millis(25);
+        let deadline = Instant::now() + self.hop_timeout;
+        loop {
+            self.check_abort()?;
+            match rx.recv_timeout(poll.min(self.hop_timeout)) {
+                Ok(msg) => return Ok(msg),
+                Err(RecvTimeoutError::Timeout) => {
+                    let _ = self.events.send(StageEvent::Heartbeat { stage: self.stage_idx });
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "stage {} ({}): timed out after {:.1}s waiting for {what}",
+                            self.stage_idx,
+                            self.stage,
+                            self.hop_timeout.as_secs_f64()
+                        );
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Distinguish supervisor teardown from a dead peer.
+                    self.check_abort()?;
+                    bail!("stage {} ({}): {what} channel closed", self.stage_idx, self.stage)
+                }
+            }
+        }
+    }
+
+    fn send_fwd(&self, step: usize, mb: usize, tensor: Tensor) -> Result<()> {
+        send_hop(
+            &self.net,
+            self.stage_idx,
+            self.stage_idx + 1,
+            step,
+            self.codec,
+            self.faults.as_deref(),
+            self.act_tx.as_ref().ok_or_else(|| anyhow!("no downstream"))?,
+            mb,
+            tensor,
+        )
+    }
+
+    fn send_bwd(&self, step: usize, mb: usize, tensor: Tensor) -> Result<()> {
+        send_hop(
+            &self.net,
+            self.stage_idx,
+            self.stage_idx - 1,
+            step,
+            self.codec,
+            self.faults.as_deref(),
+            self.grad_tx.as_ref().ok_or_else(|| anyhow!("no upstream"))?,
+            mb,
+            tensor,
+        )
+    }
+}
+
+/// One compnode's whole life for one supervised attempt: build the
+/// backend, optionally restore it from the recovery snapshot, then run the
+/// GPipe schedule for steps `start_step..steps`.
 fn stage_worker(ctx: StageCtx) -> Result<()> {
-    let engine = XlaEngine::load_stage(&ctx.dir, &ctx.stage)
-        .with_context(|| format!("loading stage '{}'", ctx.stage))?;
-    let mut rng = Rng::new(ctx.seed ^ (ctx.stage_idx as u64) << 17);
-    // Device-resident parameters/optimizer state: only activations,
-    // gradients and the step counter cross the host boundary per call
-    // (§Perf: this removed the dominant per-microbatch parameter copies).
-    let mut state = engine.new_stage_state(&ctx.stage, &mut rng)?;
+    // First signs of life before the (possibly slow) backend build.
+    let _ = ctx.events.send(StageEvent::Heartbeat { stage: ctx.stage_idx });
+    let mut backend: Box<dyn StageBackend> = ctx
+        .factory
+        .make(&ctx.stage, ctx.stage_idx, ctx.seed)
+        .with_context(|| format!("building backend for stage '{}'", ctx.stage))?;
+    if let Some(snap) = &ctx.restore {
+        backend
+            .restore(snap)
+            .with_context(|| format!("restoring stage '{}' from checkpoint", ctx.stage))?;
+    }
+    let _ = ctx.events.send(StageEvent::Heartbeat { stage: ctx.stage_idx });
 
     let mb_count = ctx.microbatches;
-    for step in 0..ctx.steps {
-        // ---- forward phase: stash this stage's inputs per microbatch ----
-        let mut stash: Vec<Option<Tensor>> = (0..mb_count).map(|_| None).collect();
+    for step in ctx.start_step..ctx.steps {
+        ctx.check_abort()?;
+        if let Some(f) = &ctx.faults {
+            if f.fire_kill(ctx.stage_idx, step) {
+                bail!("injected fault: kill stage {} at step {step}", ctx.stage_idx);
+            }
+            if let Some(ms) = f.fire_stall(ctx.stage_idx, step) {
+                log::warn!("injected fault: stage {} stalling {ms}ms at step {step}", ctx.stage_idx);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+
         let mut grads_acc: Option<Vec<Tensor>> = None;
-        let mut loss_sum = 0.0f32;
 
         if ctx.is_last {
             // Head: consume activations as they arrive; immediately run the
             // backward (which internally computes forward + loss).
+            let mut loss_sum = 0.0f32;
             for _ in 0..mb_count {
-                let msg = ctx.act_rx.as_ref().unwrap().recv().map_err(|_| anyhow!("upstream closed"))?;
+                let msg =
+                    ctx.recv_hop(ctx.act_rx.as_ref().unwrap(), "an upstream activation")?;
                 let labels =
                     fetch_tokens(&ctx.dht, step, msg.mb, "labels", &[ctx.batch, ctx.seq])?;
                 let (dx, dparams, loss) =
-                    engine.backward_cached(&state, &[&msg.tensor, &labels], None)?;
+                    backend.backward(&[&msg.tensor, &labels], None)?;
                 loss_sum += loss.unwrap_or(f32::NAN);
                 accumulate(&mut grads_acc, dparams);
-                send_hop(
-                    &ctx.net,
-                    ctx.stage_idx,
-                    ctx.stage_idx - 1,
-                    ctx.codec,
-                    ctx.grad_tx.as_ref().unwrap(),
-                    msg.mb,
-                    dx.unwrap(),
-                )?;
-                let _ = &stash; // head stashes nothing
+                ctx.send_bwd(step, msg.mb, dx.ok_or_else(|| anyhow!("head produced no dx"))?)?;
             }
-            if let Some(tx) = &ctx.loss_tx {
-                let _ = tx.send((step, loss_sum / mb_count as f32));
-            }
+            let _ =
+                ctx.events.send(StageEvent::Loss { step, loss: loss_sum / mb_count as f32 });
         } else {
-            // Forward all microbatches.
+            // Forward all microbatches, stashing this stage's inputs per
+            // microbatch for the rematerializing backward.
+            let mut stash: Vec<Option<Tensor>> = (0..mb_count).map(|_| None).collect();
             for mb in 0..mb_count {
-                let input = if ctx.is_first {
-                    fetch_tokens(&ctx.dht, step, mb, "tokens", &[ctx.batch, ctx.seq])?
+                let (mb, input) = if ctx.is_first {
+                    (mb, fetch_tokens(&ctx.dht, step, mb, "tokens", &[ctx.batch, ctx.seq])?)
                 } else {
-                    let WireMsg { mb, tensor } = ctx
-                        .act_rx
-                        .as_ref()
-                        .unwrap()
-                        .recv()
-                        .map_err(|_| anyhow!("upstream closed"))?;
-                    // use arrival mb index; stash by move once forwarded
-                    let out = engine.forward_cached(&state, &[&tensor])?;
-                    stash[mb] = Some(tensor);
-                    send_hop(
-                        &ctx.net,
-                        ctx.stage_idx,
-                        ctx.stage_idx + 1,
-                        ctx.codec,
-                        ctx.act_tx.as_ref().unwrap(),
-                        mb,
-                        out,
-                    )?;
-                    continue;
+                    // Use arrival mb index; stash by move once forwarded.
+                    let msg =
+                        ctx.recv_hop(ctx.act_rx.as_ref().unwrap(), "an upstream activation")?;
+                    (msg.mb, msg.tensor)
                 };
-                // first stage path
-                let out = engine.forward_cached(&state, &[&input])?;
+                let out = backend.forward(&[&input])?;
                 stash[mb] = Some(input);
-                send_hop(
-                    &ctx.net,
-                    ctx.stage_idx,
-                    ctx.stage_idx + 1,
-                    ctx.codec,
-                    ctx.act_tx.as_ref().unwrap(),
-                    mb,
-                    out,
-                )?;
+                ctx.send_fwd(step, mb, out)?;
             }
-            // Backward: consume gradients in arrival order.
+            // Backward: consume gradients in arrival order — single
+            // producer per channel, so the accumulation order (and the f32
+            // sum) is identical on every run and replay.
             for _ in 0..mb_count {
-                let msg = ctx
-                    .grad_rx
-                    .as_ref()
-                    .unwrap()
-                    .recv()
-                    .map_err(|_| anyhow!("downstream closed"))?;
+                let msg =
+                    ctx.recv_hop(ctx.grad_rx.as_ref().unwrap(), "a downstream gradient")?;
                 let input = stash[msg.mb]
                     .take()
                     .ok_or_else(|| anyhow!("no stashed input for microbatch {}", msg.mb))?;
-                let (dx, dparams, _) =
-                    engine.backward_cached(&state, &[&input], Some(&msg.tensor))?;
+                let (dx, dparams, _) = backend.backward(&[&input], Some(&msg.tensor))?;
                 accumulate(&mut grads_acc, dparams);
-                if let (Some(tx), Some(dx)) = (&ctx.grad_tx, dx) {
-                    send_hop(&ctx.net, ctx.stage_idx, ctx.stage_idx - 1, ctx.codec, tx, msg.mb, dx)?;
+                if let Some(dx) = dx {
+                    if ctx.grad_tx.is_some() {
+                        ctx.send_bwd(step, msg.mb, dx)?;
+                    }
                 }
             }
         }
 
         // ---- update phase ----
         let grads = grads_acc.ok_or_else(|| anyhow!("no gradients accumulated"))?;
-        engine.update_cached(&mut state, &grads, step as i32 + 1)?;
+        backend.update(&grads, step as i32 + 1)?;
+        let _ = ctx.events.send(StageEvent::Heartbeat { stage: ctx.stage_idx });
+
+        // ---- step boundary: ship recovery state ----
+        let completed = step + 1;
+        let at_boundary = ctx.ckpt_every != 0 && completed % ctx.ckpt_every == 0;
+        if at_boundary || completed == ctx.steps {
+            let _ = ctx.events.send(StageEvent::Snapshot {
+                stage: ctx.stage_idx,
+                step: completed as u64,
+                snap: backend.snapshot(),
+            });
+        }
     }
-    // Ship the final host parameter copy back for checkpointing.
-    if let Some(tx) = &ctx.ckpt_tx {
-        let _ = tx.send((ctx.stage.clone(), state.params.clone()));
-    }
+    let _ = ctx.events.send(StageEvent::Done { stage: ctx.stage_idx });
     Ok(())
 }
 
@@ -420,8 +957,13 @@ mod tests {
         let c = TrainConfig::new("artifacts/gpt-tiny");
         assert!(c.steps > 0 && c.microbatches > 0);
         assert!(c.codec.is_none());
+        assert!(c.ckpt_every > 0 && c.max_recoveries > 0 && c.backup_nodes > 0);
+        assert!(c.heartbeat_timeout_s > 0.0 && c.hop_timeout_s > 0.0);
+        assert!(c.faults.is_none());
     }
 
-    // Full trainer runs are exercised in rust/tests/integration_runtime.rs
-    // (they need `make artifacts`).
+    // Full supervised runs (clean, kill-at-step-k, drop-hop, truncated
+    // checkpoint) are exercised in rust/tests/integration_recovery.rs with
+    // the sim backend, and against real artifacts in
+    // rust/tests/integration_runtime.rs (needs `make artifacts`).
 }

@@ -22,6 +22,15 @@
 //! gpu = "H100"
 //! count = 0
 //! lambda = 0.5
+//!
+//! [recovery]                 # optional; supervised-trainer knobs (§3.2/§3.5)
+//! ckpt_every = 10            # v2 recovery checkpoint cadence (0 = final only)
+//! heartbeat_timeout_s = 60.0
+//! hop_timeout_s = 30.0
+//! max_recoveries = 2
+//! backup_nodes = 2
+//! recovery_backoff_ms = 50
+//! faults = "kill:stage=1,step=7"   # deterministic fault injection spec
 //! ```
 //!
 //! Supported TOML subset: `[section]`, `[[array-of-tables]]`,
@@ -133,6 +142,75 @@ pub struct FleetEntry {
     pub lambda: f64,
 }
 
+/// Supervised-trainer recovery knobs — the optional `[recovery]` section.
+/// Mirrors the corresponding [`crate::cluster::TrainConfig`] fields; absent
+/// keys keep the trainer's defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryConfig {
+    pub ckpt_every: usize,
+    pub heartbeat_timeout_s: f64,
+    pub hop_timeout_s: f64,
+    pub max_recoveries: usize,
+    pub backup_nodes: usize,
+    pub recovery_backoff_ms: u64,
+    /// Fault-injection spec (see `cluster::faults::FaultPlan::parse`);
+    /// validated at config-parse time, empty = no faults.
+    pub faults: String,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> RecoveryConfig {
+        RecoveryConfig {
+            ckpt_every: 10,
+            heartbeat_timeout_s: 60.0,
+            hop_timeout_s: 30.0,
+            max_recoveries: 2,
+            backup_nodes: 2,
+            recovery_backoff_ms: 50,
+            faults: String::new(),
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// Build from a parsed `[recovery]` table (missing keys → defaults).
+    pub fn from_table(t: &TomlTable) -> Result<RecoveryConfig> {
+        let d = RecoveryConfig::default();
+        let num = |key: &str, dflt: f64| -> Result<f64> {
+            match t.get(key) {
+                None => Ok(dflt),
+                Some(v) => {
+                    v.as_f64().ok_or_else(|| anyhow!("[recovery] {key} must be a number"))
+                }
+            }
+        };
+        let cfg = RecoveryConfig {
+            ckpt_every: num("ckpt_every", d.ckpt_every as f64)? as usize,
+            heartbeat_timeout_s: num("heartbeat_timeout_s", d.heartbeat_timeout_s)?,
+            hop_timeout_s: num("hop_timeout_s", d.hop_timeout_s)?,
+            max_recoveries: num("max_recoveries", d.max_recoveries as f64)? as usize,
+            backup_nodes: num("backup_nodes", d.backup_nodes as f64)? as usize,
+            recovery_backoff_ms: num("recovery_backoff_ms", d.recovery_backoff_ms as f64)?
+                as u64,
+            faults: match t.get("faults") {
+                None => String::new(),
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("[recovery] faults must be a string"))?
+                    .to_string(),
+            },
+        };
+        if cfg.heartbeat_timeout_s <= 0.0 || cfg.hop_timeout_s <= 0.0 {
+            bail!("[recovery] timeouts must be positive");
+        }
+        if !cfg.faults.is_empty() {
+            // Surface a bad spec at parse time, not mid-run.
+            crate::cluster::faults::FaultPlan::parse(&cfg.faults)?;
+        }
+        Ok(cfg)
+    }
+}
+
 /// The typed experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -141,6 +219,8 @@ pub struct ExperimentConfig {
     pub training: bool,
     pub link: LinkModel,
     pub fleet: Vec<FleetEntry>,
+    /// `[recovery]` section; `None` when absent (trainer defaults apply).
+    pub recovery: Option<RecoveryConfig>,
 }
 
 impl ExperimentConfig {
@@ -180,12 +260,15 @@ impl ExperimentConfig {
         if fleet.is_empty() {
             bail!("config declares no fleet devices");
         }
+        let recovery =
+            doc.tables.get("recovery").map(RecoveryConfig::from_table).transpose()?;
         Ok(ExperimentConfig {
             model,
             batches,
             training,
             link: LinkModel::from_ms_mbps(lat, bw),
             fleet,
+            recovery,
         })
     }
 
@@ -263,6 +346,29 @@ lambda = 0.5
         assert!(ExperimentConfig::from_toml(bad).is_err());
         let nofleet = "[job]\nmodel = \"gpt-tiny\"";
         assert!(ExperimentConfig::from_toml(nofleet).is_err());
+    }
+
+    #[test]
+    fn recovery_section_is_optional_and_validated() {
+        let c = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert!(c.recovery.is_none());
+
+        let with = format!(
+            "{SAMPLE}\n[recovery]\nckpt_every = 5\nmax_recoveries = 3\n\
+             faults = \"kill:stage=1,step=7\"\n"
+        );
+        let c = ExperimentConfig::from_toml(&with).unwrap();
+        let r = c.recovery.unwrap();
+        assert_eq!(r.ckpt_every, 5);
+        assert_eq!(r.max_recoveries, 3);
+        assert_eq!(r.backup_nodes, RecoveryConfig::default().backup_nodes);
+        assert_eq!(r.faults, "kill:stage=1,step=7");
+
+        // A bad fault spec or non-positive timeout fails at parse time.
+        let bad = format!("{SAMPLE}\n[recovery]\nfaults = \"explode:stage=1\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        let bad = format!("{SAMPLE}\n[recovery]\nhop_timeout_s = 0\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
     }
 
     #[test]

@@ -194,6 +194,11 @@ pub struct StageState {
     pub stage: String,
     /// Host copy of the parameters (checkpointing / inspection).
     pub params: Vec<Tensor>,
+    /// Host copies of the Adam moments — kept in lockstep with the device
+    /// buffers so a v2 recovery checkpoint can snapshot exact optimizer
+    /// state without a device read-back.
+    pub opt_m: Vec<Tensor>,
+    pub opt_v: Vec<Tensor>,
     param_bufs: Vec<xla::PjRtBuffer>,
     m_bufs: Vec<xla::PjRtBuffer>,
     v_bufs: Vec<xla::PjRtBuffer>,
@@ -209,14 +214,42 @@ impl XlaEngine {
     /// Initialize a device-resident stage state.
     pub fn new_stage_state(&self, stage: &str, rng: &mut Rng) -> Result<StageState> {
         let params = self.init_stage_params(stage, rng)?;
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        self.stage_state_from_parts(stage, params, zeros.clone(), zeros)
+    }
+
+    /// Build a device-resident stage state from explicit host tensors
+    /// (restoring from a recovery checkpoint).
+    pub fn stage_state_from_parts(
+        &self,
+        stage: &str,
+        params: Vec<Tensor>,
+        opt_m: Vec<Tensor>,
+        opt_v: Vec<Tensor>,
+    ) -> Result<StageState> {
+        if opt_m.len() != params.len() || opt_v.len() != params.len() {
+            bail!(
+                "stage '{stage}' state arity mismatch: {} params, {} m, {} v",
+                params.len(),
+                opt_m.len(),
+                opt_v.len()
+            );
+        }
         let param_bufs =
             params.iter().map(|p| self.runtime.to_buffer(p)).collect::<Result<Vec<_>>>()?;
-        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
         let m_bufs =
-            zeros.iter().map(|z| self.runtime.to_buffer(z)).collect::<Result<Vec<_>>>()?;
+            opt_m.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<Vec<_>>>()?;
         let v_bufs =
-            zeros.iter().map(|z| self.runtime.to_buffer(z)).collect::<Result<Vec<_>>>()?;
-        Ok(StageState { stage: stage.to_string(), params, param_bufs, m_bufs, v_bufs })
+            opt_v.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<Vec<_>>>()?;
+        Ok(StageState {
+            stage: stage.to_string(),
+            params,
+            opt_m,
+            opt_v,
+            param_bufs,
+            m_bufs,
+            v_bufs,
+        })
     }
 
     /// Forward with cached parameter buffers.
@@ -310,6 +343,8 @@ impl XlaEngine {
             st.params.iter().map(|p| self.runtime.to_buffer(p)).collect::<Result<_>>()?;
         st.m_bufs = new_m.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<_>>()?;
         st.v_bufs = new_v.iter().map(|t| self.runtime.to_buffer(t)).collect::<Result<_>>()?;
+        st.opt_m = new_m;
+        st.opt_v = new_v;
         Ok(())
     }
 }

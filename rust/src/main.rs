@@ -5,17 +5,22 @@
 //! ```text
 //! fusionai estimate --config <fleet.toml>     analytic latency/throughput (Eq. 3/4)
 //! fusionai train    --artifacts <dir> [--steps N] [--microbatches M] [--codec int8|topk|none]
+//!                   [--backend xla|sim] [--faults <spec>] [--ckpt-every N]
+//!                   [--max-recoveries N] [--backup-nodes N] [--hop-timeout-s S]
 //! fusionai serve    --artifacts <dir> [--requests N] [--new-tokens K]
 //! fusionai schedule --model <preset> --subtasks K --nodes N --gpu <name>
 //! fusionai info                                GPU database + trend summary
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use fusionai::benchutil::Table;
-use fusionai::cluster::{PipelineTrainer, TrainConfig};
+use fusionai::cluster::{
+    FaultPlan, PipelineTrainer, SimStageFactory, SimStagesConfig, TrainConfig,
+};
 use fusionai::compress::Codec;
 use fusionai::config::{model_by_name, ExperimentConfig};
 use fusionai::decompose::Decomposition;
@@ -62,6 +67,8 @@ fn print_usage() {
          usage:\n\
            fusionai estimate --config <fleet.toml>\n\
            fusionai train    --artifacts <dir> [--steps N] [--microbatches M] [--codec int8|topk|none]\n\
+                             [--backend xla|sim] [--faults <spec>] [--ckpt-every N]\n\
+                             [--max-recoveries N] [--backup-nodes N] [--hop-timeout-s S]\n\
            fusionai serve    --artifacts <dir> [--requests N] [--new-tokens K]\n\
            fusionai schedule --model <preset> --subtasks K --nodes N --gpu <name>\n\
            fusionai info\n"
@@ -127,9 +134,16 @@ fn cmd_estimate(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// `train`: the live pipeline trainer.
+/// `train`: the live pipeline trainer under supervision.
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = flags.get("artifacts").ok_or_else(|| anyhow!("train needs --artifacts"))?;
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("xla");
+    // The sim backend needs no compiled artifacts; its dir only holds
+    // checkpoints.
+    let dir = match flags.get("artifacts") {
+        Some(d) => d.clone(),
+        None if backend == "sim" => "artifacts/sim".to_string(),
+        None => bail!("train needs --artifacts (unless --backend sim)"),
+    };
     let mut cfg = TrainConfig::new(dir);
     cfg.steps = flag_usize(flags, "steps", 50)?;
     cfg.microbatches = flag_usize(flags, "microbatches", 2)?;
@@ -139,7 +153,22 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         Some("topk") => Some(Codec::TopK { ratio: 0.1 }),
         Some(other) => bail!("unknown codec '{other}'"),
     };
-    let trainer = PipelineTrainer::new(cfg)?;
+    cfg.ckpt_every = flag_usize(flags, "ckpt-every", cfg.ckpt_every)?;
+    cfg.max_recoveries = flag_usize(flags, "max-recoveries", cfg.max_recoveries)?;
+    cfg.backup_nodes = flag_usize(flags, "backup-nodes", cfg.backup_nodes)?;
+    cfg.hop_timeout_s = flag_f64(flags, "hop-timeout-s", cfg.hop_timeout_s)?;
+    if let Some(spec) = flags.get("faults") {
+        cfg.faults = Some(Arc::new(FaultPlan::parse(spec)?));
+    }
+    let trainer = match backend {
+        "xla" => PipelineTrainer::new(cfg)?,
+        "sim" => {
+            let sim = SimStagesConfig::default();
+            let manifest = sim.manifest();
+            PipelineTrainer::with_backend(cfg, manifest, Arc::new(SimStageFactory { cfg: sim }))?
+        }
+        other => bail!("unknown backend '{other}' (xla|sim)"),
+    };
     println!(
         "training preset '{}' for {} steps × {} microbatches over {} stages",
         trainer.manifest.preset,
@@ -158,7 +187,27 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         human_bytes(report.comm_bytes),
         human_secs(report.comm_model_seconds)
     );
+    if report.recoveries > 0 || report.stage_failures > 0 || report.messages_dropped > 0 {
+        println!(
+            "recovery: {} restart(s) over {} stage failure(s) | {} checkpoint(s) written | \
+             {} message(s) dropped",
+            report.recoveries,
+            report.stage_failures,
+            report.checkpoints_written,
+            report.messages_dropped
+        );
+        for ev in &report.broker_events {
+            println!("  broker: {ev:?}");
+        }
+    }
     Ok(())
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants a number, got '{v}'")),
+    }
 }
 
 /// `serve`: batched greedy-decoding inference.

@@ -60,6 +60,8 @@ pub struct LinkStats {
     pub messages: u64,
     pub bytes: u64,
     pub model_seconds: f64,
+    /// Messages lost in flight (fault injection; see `cluster::faults`).
+    pub dropped: u64,
 }
 
 /// The network simulator: topology + accounting + clock policy.
@@ -94,6 +96,24 @@ impl NetworkSim {
             std::thread::sleep(std::time::Duration::from_secs_f64(t * self.time_scale));
         }
         t
+    }
+
+    /// Account a message that was lost in flight: the sender paid the
+    /// serialization + transfer time, the receiver never sees it. Returns
+    /// the modelled seconds burned (and sleeps them in live mode, like
+    /// [`transfer`](Self::transfer) — a drop is not observable faster than
+    /// a delivery).
+    pub fn drop_message(&self, from: Addr, to: Addr, bytes: u64) -> f64 {
+        let t = self.transfer(from, to, bytes);
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry((from, to)).or_default();
+        e.dropped += 1;
+        t
+    }
+
+    /// Total messages dropped across all links.
+    pub fn total_dropped(&self) -> u64 {
+        self.stats.lock().unwrap().values().map(|s| s.dropped).sum()
     }
 
     pub fn link(&self, from: Addr, to: Addr) -> LinkModel {
@@ -152,6 +172,19 @@ mod tests {
         let stats = sim.stats();
         assert_eq!(stats[&(0, 1)].messages, 2);
         assert!(sim.total_remote_seconds() > 0.02);
+    }
+
+    #[test]
+    fn dropped_messages_are_accounted() {
+        let sim = NetworkSim::new(Topology::uniform(LinkModel::from_ms_mbps(10.0, 100.0)), 0.0);
+        sim.delay(0, 1, 1000);
+        let t = sim.drop_message(0, 1, 2000);
+        assert!(t > 0.0, "a drop still burns transfer time");
+        let stats = sim.stats();
+        assert_eq!(stats[&(0, 1)].messages, 2, "drops count as sent messages");
+        assert_eq!(stats[&(0, 1)].dropped, 1);
+        assert_eq!(sim.total_dropped(), 1);
+        assert_eq!(sim.total_remote_bytes(), 3000, "sender paid the bytes");
     }
 
     #[test]

@@ -152,6 +152,9 @@ impl Manifest {
 pub struct Runtime {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Artifact name → declared `n_outputs` (from the manifest); execute
+    /// validates the result tuple against it when present.
+    expected_outputs: HashMap<String, usize>,
     dir: PathBuf,
 }
 
@@ -159,7 +162,12 @@ impl Runtime {
     /// Create a CPU-backed runtime.
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, executables: HashMap::new(), dir: PathBuf::new() })
+        Ok(Runtime {
+            client,
+            executables: HashMap::new(),
+            expected_outputs: HashMap::new(),
+            dir: PathBuf::new(),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -187,6 +195,7 @@ impl Runtime {
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
         for a in &manifest.artifacts {
             self.load_hlo_text(&a.name, &dir.join(&a.file))?;
+            self.expected_outputs.insert(a.name.clone(), a.n_outputs);
         }
         self.dir = dir.to_path_buf();
         Ok(manifest)
@@ -203,6 +212,7 @@ impl Runtime {
         for a in &manifest.artifacts {
             if filter(&a.name) {
                 self.load_hlo_text(&a.name, &dir.join(&a.file))?;
+                self.expected_outputs.insert(a.name.clone(), a.n_outputs);
             }
         }
         self.dir = dir.to_path_buf();
@@ -225,8 +235,22 @@ impl Runtime {
             .get(name)
             .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
         let out = exe.execute::<xla::Literal>(inputs)?;
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+        let lit = first_result(name, &out)?.to_literal_sync()?;
+        let elems = lit.to_tuple()?;
+        self.check_arity(name, elems.len())?;
+        Ok(elems)
+    }
+
+    /// Validate a result tuple against the manifest's declared `n_outputs`
+    /// (artifacts loaded directly via [`load_hlo_text`](Self::load_hlo_text)
+    /// declare nothing and are exempt).
+    fn check_arity(&self, name: &str, got: usize) -> Result<()> {
+        if let Some(&want) = self.expected_outputs.get(name) {
+            if got != want {
+                bail!("artifact '{name}' returned {got} outputs, manifest declares {want}");
+            }
+        }
+        Ok(())
     }
 
     /// Execute with tensors in / tensors out (the coordinator-facing API).
@@ -264,9 +288,23 @@ impl Runtime {
             .get(name)
             .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
         let out = exe.execute_b(args)?;
-        let lit = out[0][0].to_literal_sync()?;
-        lit.to_tuple()?.iter().map(from_literal).collect()
+        let lit = first_result(name, &out)?.to_literal_sync()?;
+        let elems = lit.to_tuple()?;
+        self.check_arity(name, elems.len())?;
+        elems.iter().map(from_literal).collect()
     }
+}
+
+/// PJRT returns results as per-device → per-output nesting; we run on one
+/// device with tupled outputs, so take `[0][0]` — but checked: a misbehaving
+/// plugin returning an empty set must surface as an error, not a panic.
+fn first_result<'a>(
+    name: &str,
+    out: &'a [Vec<xla::PjRtBuffer>],
+) -> Result<&'a xla::PjRtBuffer> {
+    out.first()
+        .and_then(|per_device| per_device.first())
+        .ok_or_else(|| anyhow!("artifact '{name}' execution returned an empty result set"))
 }
 
 /// Convert a [`Tensor`] into an XLA literal.
@@ -349,6 +387,15 @@ ENTRY main {
             return;
         };
         assert!(rt.run("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn empty_result_set_is_an_error() {
+        let out: Vec<Vec<xla::PjRtBuffer>> = Vec::new();
+        let err = first_result("embed_fwd", &out).unwrap_err().to_string();
+        assert!(err.contains("empty result set"), "got: {err}");
+        let out = vec![Vec::new()];
+        assert!(first_result("embed_fwd", &out).is_err());
     }
 
     #[test]
