@@ -211,7 +211,7 @@ impl Broker {
             .max_by(|(_, (a, _)), (_, (b, _))| {
                 let ka = (a.class == NodeClass::Supernode, a.lambda * a.gpu.peak_tensor_flops());
                 let kb = (b.class == NodeClass::Supernode, b.lambda * b.gpu.peak_tensor_flops());
-                ka.partial_cmp(&kb).unwrap()
+                ka.0.cmp(&kb.0).then(ka.1.total_cmp(&kb.1))
             })
             .map(|(&id, _)| id)?;
         self.nodes.get_mut(&pick).unwrap().1 = NodeState::Active;

@@ -102,6 +102,7 @@ impl Codec {
 
 /// Symmetric per-tensor int8 quantization: `q = round(x / scale)` with
 /// `scale = max|x| / 127`. Returns `(q, scale)`.
+#[allow(clippy::float_cmp)] // amax == 0.0 iff the tensor is exactly all-zero
 pub fn quantize_int8(data: &[f32]) -> (Vec<i8>, f32) {
     let amax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
     if amax == 0.0 {
@@ -122,9 +123,7 @@ pub fn topk(data: &[f32], ratio: f64) -> Vec<(usize, f32)> {
     let k = ((ratio * n as f64).ceil() as usize).clamp(1, n);
     let mut idx: Vec<usize> = (0..n).collect();
     // Partial selection: k-th largest magnitude.
-    idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        data[b].abs().partial_cmp(&data[a].abs()).unwrap()
-    });
+    idx.select_nth_unstable_by(k - 1, |&a, &b| data[b].abs().total_cmp(&data[a].abs()));
     let mut kept: Vec<(usize, f32)> = idx[..k].iter().map(|&i| (i, data[i])).collect();
     kept.sort_by_key(|&(i, _)| i);
     kept

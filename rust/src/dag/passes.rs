@@ -54,9 +54,14 @@ impl PassManager {
             .with_pass(TopoValidate)
     }
 
-    /// Validation only — no rewrites, `NodeId`s stay stable.
+    /// Validation only — no rewrites, `NodeId`s stay stable. Ends with the
+    /// static linter (`verify::GraphLintPass`): lint *errors* fail the
+    /// pipeline, lint warnings (dead code) pass through.
     pub fn validation() -> PassManager {
-        PassManager::new().with_pass(ShapeInference).with_pass(TopoValidate)
+        PassManager::new()
+            .with_pass(ShapeInference)
+            .with_pass(TopoValidate)
+            .with_pass(crate::verify::GraphLintPass)
     }
 
     pub fn with_pass(mut self, p: impl GraphPass + 'static) -> PassManager {

@@ -36,6 +36,7 @@ impl Sgd {
 }
 
 impl Optimizer for Sgd {
+    #[allow(clippy::float_cmp)] // momentum == 0.0 selects the no-velocity path exactly
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         assert_eq!(params.len(), grads.len());
         if self.momentum == 0.0 {

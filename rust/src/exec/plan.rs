@@ -152,7 +152,7 @@ impl ExecPlan {
             }
         }
 
-        Ok(ExecPlan {
+        let plan = ExecPlan {
             order,
             mine: in_set.to_vec(),
             waves,
@@ -165,7 +165,19 @@ impl ExecPlan {
             bwd_wave_flops,
             bwd_pos,
             stash_uses,
-        })
+        };
+
+        // Self-verification: prove the plan race- and use-after-free-free
+        // before anything caches it. Always on in debug builds, opt-in for
+        // release via FUSIONAI_VERIFY=1 (see `crate::verify`).
+        if crate::verify::verify_enabled() {
+            let report = crate::verify::check_plan(g, bwd, &plan);
+            if report.has_errors() {
+                anyhow::bail!("ExecPlan verification failed:\n{}", report.render());
+            }
+        }
+
+        Ok(plan)
     }
 
     /// Widest forward wave (how much node-level parallelism exists).

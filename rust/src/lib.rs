@@ -43,6 +43,7 @@ pub mod benchutil;
 pub mod proptesting;
 pub mod cluster;
 pub mod serve;
+pub mod verify;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -9,6 +9,7 @@
 //!                   [--max-recoveries N] [--backup-nodes N] [--hop-timeout-s S]
 //! fusionai serve    --artifacts <dir> [--requests N] [--new-tokens K]
 //! fusionai schedule --model <preset> --subtasks K --nodes N --gpu <name>
+//! fusionai lint     --graph <g.json> | --model <preset> [--partition K] [--emit <out.json>]
 //! fusionai info                                GPU database + trend summary
 //! ```
 
@@ -23,7 +24,10 @@ use fusionai::cluster::{
 };
 use fusionai::compress::Codec;
 use fusionai::config::{model_by_name, ExperimentConfig};
-use fusionai::decompose::Decomposition;
+use fusionai::dag::autodiff::backward_plan;
+use fusionai::dag::{Graph, GraphPass};
+use fusionai::decompose::{ChainPartitionPass, Decomposition};
+use fusionai::exec::ExecPlan;
 use fusionai::perf::gpus::{lookup, GPU_DB};
 use fusionai::perf::paleo::{DeviceProfile, PaleoModel};
 use fusionai::perf::trends;
@@ -31,6 +35,7 @@ use fusionai::pipeline::analytics::PipelineEstimate;
 use fusionai::sched;
 use fusionai::serve::{run_trace, InferenceServer, Request};
 use fusionai::util::{human_bytes, human_flops, human_secs, Rng};
+use fusionai::verify::{check_plan, lint_graph};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -51,6 +56,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
         "schedule" => cmd_schedule(&flags),
+        "lint" => cmd_lint(&flags),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -71,6 +77,7 @@ fn print_usage() {
                              [--max-recoveries N] [--backup-nodes N] [--hop-timeout-s S]\n\
            fusionai serve    --artifacts <dir> [--requests N] [--new-tokens K]\n\
            fusionai schedule --model <preset> --subtasks K --nodes N --gpu <name>\n\
+           fusionai lint     --graph <g.json> | --model <preset> [--partition K] [--emit <out.json>]\n\
            fusionai info\n"
     );
 }
@@ -262,6 +269,54 @@ fn cmd_schedule(flags: &HashMap<String, String>) -> Result<()> {
         100.0 * (s.makespan() - s.loads.iter().cloned().fold(f64::INFINITY, f64::min))
             / s.makespan()
     );
+    Ok(())
+}
+
+/// `lint`: run the static verifier over a graph (JSON file or preset) and
+/// its compiled execution plan. Exits non-zero on any error diagnostic.
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<()> {
+    let mut g: Graph = match (flags.get("graph"), flags.get("model")) {
+        (Some(path), _) => {
+            Graph::from_json(&std::fs::read_to_string(path)?).map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        (None, Some(preset)) => model_by_name(preset)?.build_graph(),
+        (None, None) => bail!("lint needs --graph <g.json> or --model <preset>"),
+    };
+    if let Some(k) = flags.get("partition") {
+        let k: usize = k.parse().map_err(|_| anyhow!("--partition wants an integer, got '{k}'"))?;
+        ChainPartitionPass::new(k)
+            .run(&mut g)
+            .map_err(|e| anyhow!("partitioning failed: {e}"))?;
+    }
+    if let Some(out) = flags.get("emit") {
+        std::fs::write(out, g.to_json())?;
+        println!("wrote {out}");
+    }
+    println!(
+        "graph: {} node(s) | {} trainable | {} loss node(s) | {} fwd FLOPs",
+        g.len(),
+        g.trainable_nodes().len(),
+        g.loss_nodes().len(),
+        human_flops(g.total_fwd_flops())
+    );
+    let mut report = lint_graph(&g);
+    if !report.has_errors() {
+        // The graph is sound — compile its plan and verify that too.
+        let bwd = backward_plan(&g);
+        let plan = ExecPlan::compile_full(&g, &bwd)?;
+        println!(
+            "plan:  {} fwd wave(s) (max width {}) | {} bwd wave(s) | {} bwd task(s)",
+            plan.waves.len(),
+            plan.max_wave_width(),
+            plan.bwd_waves.len(),
+            plan.bwd_order.len()
+        );
+        report.merge(check_plan(&g, &bwd, &plan));
+    }
+    println!("{}", report.render());
+    if report.has_errors() {
+        bail!("{} error diagnostic(s)", report.error_count());
+    }
     Ok(())
 }
 

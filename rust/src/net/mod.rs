@@ -77,10 +77,18 @@ impl NetworkSim {
         NetworkSim { topo, stats: Mutex::new(HashMap::new()), time_scale }
     }
 
+    /// Counters survive a panicked sender thread: the map holds no invariant
+    /// a panic can break (every update is a single saturating bump), so a
+    /// poisoned lock is recovered instead of cascading the panic into every
+    /// other stage thread.
+    fn stats_guard(&self) -> std::sync::MutexGuard<'_, HashMap<(Addr, Addr), LinkStats>> {
+        self.stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Modelled transfer seconds for `bytes` from→to, with accounting.
     pub fn delay(&self, from: Addr, to: Addr, bytes: u64) -> f64 {
         let t = self.topo.link(from, to).time(bytes);
-        let mut stats = self.stats.lock().unwrap();
+        let mut stats = self.stats_guard();
         let e = stats.entry((from, to)).or_default();
         e.messages += 1;
         e.bytes += bytes;
@@ -105,7 +113,7 @@ impl NetworkSim {
     /// a delivery).
     pub fn drop_message(&self, from: Addr, to: Addr, bytes: u64) -> f64 {
         let t = self.transfer(from, to, bytes);
-        let mut stats = self.stats.lock().unwrap();
+        let mut stats = self.stats_guard();
         let e = stats.entry((from, to)).or_default();
         e.dropped += 1;
         t
@@ -113,7 +121,7 @@ impl NetworkSim {
 
     /// Total messages dropped across all links.
     pub fn total_dropped(&self) -> u64 {
-        self.stats.lock().unwrap().values().map(|s| s.dropped).sum()
+        self.stats_guard().values().map(|s| s.dropped).sum()
     }
 
     pub fn link(&self, from: Addr, to: Addr) -> LinkModel {
@@ -122,14 +130,12 @@ impl NetworkSim {
 
     /// Snapshot of all per-link stats.
     pub fn stats(&self) -> HashMap<(Addr, Addr), LinkStats> {
-        self.stats.lock().unwrap().clone()
+        self.stats_guard().clone()
     }
 
     /// Total bytes moved across remote links.
     pub fn total_remote_bytes(&self) -> u64 {
-        self.stats
-            .lock()
-            .unwrap()
+        self.stats_guard()
             .iter()
             .filter(|((f, t), _)| f != t)
             .map(|(_, s)| s.bytes)
@@ -138,9 +144,7 @@ impl NetworkSim {
 
     /// Total modelled seconds across remote links.
     pub fn total_remote_seconds(&self) -> f64 {
-        self.stats
-            .lock()
-            .unwrap()
+        self.stats_guard()
             .iter()
             .filter(|((f, t), _)| f != t)
             .map(|(_, s)| s.model_seconds)

@@ -53,6 +53,7 @@ impl LinkModel {
     }
 
     /// Bandwidth in bytes/sec.
+    #[allow(clippy::float_cmp)] // beta == 0.0 means an explicitly infinite link
     pub fn bandwidth(&self) -> f64 {
         if self.beta == 0.0 {
             f64::INFINITY

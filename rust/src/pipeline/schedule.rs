@@ -49,7 +49,14 @@ impl MicrobatchSchedule {
             }
             evs.push(PipeEvent { stage: s, microbatch: 0, kind: PipeEventKind::Update });
         }
-        MicrobatchSchedule { stages, microbatches, per_stage }
+        let sched = MicrobatchSchedule { stages, microbatches, per_stage };
+        // Self-verification (debug builds / FUSIONAI_VERIFY=1): coverage,
+        // dependency acyclicity and head-pointer progress.
+        if crate::verify::verify_enabled() {
+            let report = crate::verify::check_schedule(&sched);
+            assert!(!report.has_errors(), "gpipe schedule failed verification:\n{}", report.render());
+        }
+        sched
     }
 
     /// The events `ev` depends on (cross-stage + same-stage-previous).

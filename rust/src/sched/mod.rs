@@ -131,7 +131,7 @@ fn fits(task: &TaskSpec, peer: &PeerSpec, gpu: u64, cpu: u64, disk: u64) -> bool
 pub fn lpt(tasks: &[TaskSpec], peers: &[PeerSpec]) -> Result<Schedule, SchedError> {
     let mut order: Vec<usize> = (0..tasks.len()).collect();
     // Reference time on the fastest peer — any consistent monotone key works.
-    order.sort_by(|&a, &b| tasks[b].flops.partial_cmp(&tasks[a].flops).unwrap());
+    order.sort_by(|&a, &b| tasks[b].flops.total_cmp(&tasks[a].flops));
 
     let mut sched = Schedule {
         of_task: vec![usize::MAX; tasks.len()],
@@ -171,7 +171,7 @@ pub fn refine(sched: &mut Schedule, tasks: &[TaskSpec], peers: &[PeerSpec], max_
             .loads
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let mut improved = false;
 

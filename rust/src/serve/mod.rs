@@ -124,7 +124,7 @@ impl InferenceServer {
                 let next = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i as i32)
                     .unwrap();
                 s.push(next);
@@ -177,7 +177,7 @@ pub fn run_trace(
     mut requests: Vec<Request>,
     n_new: usize,
 ) -> Result<(Vec<Response>, ServeStats)> {
-    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     let mut batcher = Batcher::new(server.batch);
     for r in requests {
         batcher.push(r);

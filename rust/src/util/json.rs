@@ -73,6 +73,7 @@ impl Json {
         s
     }
 
+    #[allow(clippy::float_cmp)] // fract() == 0.0 is the exact integrality test
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

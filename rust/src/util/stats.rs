@@ -85,7 +85,7 @@ impl Sample {
             return 0.0;
         }
         let mut s = self.xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -115,6 +115,7 @@ impl Sample {
 /// (`T_comm = α + β·M`, §3.3) and the λ scaling-factor regression (§3.7,
 /// with x = predicted peak-speed time, intercept pinned by the caller if
 /// needed).
+#[allow(clippy::float_cmp)] // sxx == 0.0 iff all xs identical: degenerate fit, exact test
 pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
     assert_eq!(xs.len(), ys.len());
     let n = xs.len() as f64;
@@ -138,6 +139,7 @@ pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
 
 /// Least squares through the origin: `y ≈ b·x`. Returns `b`.
 /// Used for the λ fit where S(p) = λ·S*(p) has no intercept.
+#[allow(clippy::float_cmp)] // sxx == 0.0: exact degenerate-input test
 pub fn linfit_origin(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
     let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();

@@ -1,0 +1,295 @@
+//! Diagnostics framework for the static verifier.
+//!
+//! Every analyzer ([`crate::verify::graph_lint`], [`crate::verify::plan_check`],
+//! [`crate::verify::schedule_check`]) reports findings as [`Diagnostic`]s with
+//! a stable [`Code`] (`FA001`, `FA002`, …), a [`Severity`] and a [`Span`]
+//! locating the finding in a graph, plan or schedule. Codes are part of the
+//! tool's contract: tests assert on them and CI greps rendered reports, so a
+//! code is never reused for a different condition once published (see
+//! DESIGN.md §Static analysis for the full table).
+
+use std::fmt;
+
+use crate::dag::NodeId;
+
+/// How bad a finding is. Errors fail `PassManager::validation()`, plan
+/// compilation under `FUSIONAI_VERIFY=1` and the `lint` subcommand; warnings
+/// are advisory (e.g. dead code that `DeadNodeElimination` would remove).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// Stable diagnostic codes. `FA0xx` = graph lints, `FA1xx` = execution-plan
+/// proofs, `FA2xx` = pipeline-schedule legality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Code {
+    /// FA001 — two nodes share a name.
+    DuplicateName,
+    /// FA002 — fan-in arity does not match the operator kind.
+    ArityMismatch,
+    /// FA003 — an i32 tensor feeds an operator that only takes f32.
+    DtypeViolation,
+    /// FA004 — declared shape/dtype disagrees with re-inference (or
+    /// inference fails outright).
+    ShapeIncoherent,
+    /// FA005 — an arg references a node that does not exist, or ids are not
+    /// dense.
+    DanglingInput,
+    /// FA006 — node cannot influence any loss/sink (dead code).
+    UnreachableNode,
+    /// FA007 — stage-partition invariant broken: missing/unparsable
+    /// `"subgraph"` kwarg or a backward cross-stage edge.
+    StagePartition,
+    /// FA101 — forward waves are not a partition of the plan's order.
+    WavePartition,
+    /// FA102 — a node and one of its inputs share a wave (data race) or the
+    /// input is scheduled later.
+    WaveOrdering,
+    /// FA103 — `fwd_uses` disagrees with the recounted in-set consumers.
+    FwdUseCount,
+    /// FA104 — `stash_uses` disagrees with the recounted backward readers.
+    StashUseCount,
+    /// FA105 — symbolic replay reads a tensor after its refcount freed it
+    /// (or a refcount underflows).
+    UseAfterFree,
+    /// FA106 — keep-set violation: a stash, loss, sink or messaged output
+    /// would not survive as long as its readers need it.
+    KeepSetViolation,
+    /// FA107 — backward order/waves/positions disagree with the global
+    /// backward plan.
+    BwdOrdering,
+    /// FA201 — the schedule's dependency relation has a cycle.
+    DepsCycle,
+    /// FA202 — per-stage event order deadlocks (a stage's head event waits
+    /// on an event that can never complete first).
+    ScheduleDeadlock,
+    /// FA203 — microbatch coverage broken: missing/duplicated
+    /// forward/backward/update events or misfiled stages.
+    MicrobatchCoverage,
+}
+
+impl Code {
+    /// The stable wire form, `FA001`…
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::DuplicateName => "FA001",
+            Code::ArityMismatch => "FA002",
+            Code::DtypeViolation => "FA003",
+            Code::ShapeIncoherent => "FA004",
+            Code::DanglingInput => "FA005",
+            Code::UnreachableNode => "FA006",
+            Code::StagePartition => "FA007",
+            Code::WavePartition => "FA101",
+            Code::WaveOrdering => "FA102",
+            Code::FwdUseCount => "FA103",
+            Code::StashUseCount => "FA104",
+            Code::UseAfterFree => "FA105",
+            Code::KeepSetViolation => "FA106",
+            Code::BwdOrdering => "FA107",
+            Code::DepsCycle => "FA201",
+            Code::ScheduleDeadlock => "FA202",
+            Code::MicrobatchCoverage => "FA203",
+        }
+    }
+
+    /// Default severity: everything is an error except dead code.
+    pub fn default_severity(self) -> Severity {
+        match self {
+            Code::UnreachableNode => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// Where a diagnostic points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Span {
+    /// One graph node.
+    Node(NodeId),
+    /// A data edge `from → to`.
+    Edge { from: NodeId, to: NodeId },
+    /// A forward wave of an execution plan.
+    Wave(usize),
+    /// A backward wave of an execution plan.
+    BwdWave(usize),
+    /// A pipeline stage.
+    Stage(usize),
+    /// One pipeline event `(stage, microbatch)`.
+    Event { stage: usize, microbatch: usize },
+    /// The whole artifact.
+    Global,
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Span::Node(id) => write!(f, "node {id}"),
+            Span::Edge { from, to } => write!(f, "edge {from}→{to}"),
+            Span::Wave(w) => write!(f, "wave {w}"),
+            Span::BwdWave(w) => write!(f, "bwd wave {w}"),
+            Span::Stage(s) => write!(f, "stage {s}"),
+            Span::Event { stage, microbatch } => write!(f, "event (s{stage}, m{microbatch})"),
+            Span::Global => write!(f, "global"),
+        }
+    }
+}
+
+/// One finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub severity: Severity,
+    pub span: Span,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {} at {}: {}", self.code, self.severity, self.span, self.message)
+    }
+}
+
+/// An ordered collection of findings from one analyzer run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// Record a finding at the code's default severity.
+    pub fn push(&mut self, code: Code, span: Span, message: String) {
+        self.diags.push(Diagnostic { code, severity: code.default_severity(), span, message });
+    }
+
+    /// Append every finding of `other`.
+    pub fn merge(&mut self, other: Report) {
+        self.diags.extend(other.diags);
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// No findings at all — not even warnings.
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Whether any finding carries `code`.
+    pub fn has(&self, code: Code) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// Error-severity codes in report order, consecutive repeats collapsed
+    /// (the form the adversarial-fixture tests assert on).
+    pub fn error_codes(&self) -> Vec<Code> {
+        let mut v: Vec<Code> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.code)
+            .collect();
+        v.dedup();
+        v
+    }
+
+    /// Human-readable multi-line report.
+    pub fn render(&self) -> String {
+        if self.diags.is_empty() {
+            return "verify: clean (no diagnostics)".to_string();
+        }
+        let mut s = String::new();
+        for d in &self.diags {
+            s.push_str(&d.to_string());
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "verify: {} error(s), {} warning(s)",
+            self.error_count(),
+            self.warning_count()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_unique() {
+        let all = [
+            Code::DuplicateName,
+            Code::ArityMismatch,
+            Code::DtypeViolation,
+            Code::ShapeIncoherent,
+            Code::DanglingInput,
+            Code::UnreachableNode,
+            Code::StagePartition,
+            Code::WavePartition,
+            Code::WaveOrdering,
+            Code::FwdUseCount,
+            Code::StashUseCount,
+            Code::UseAfterFree,
+            Code::KeepSetViolation,
+            Code::BwdOrdering,
+            Code::DepsCycle,
+            Code::ScheduleDeadlock,
+            Code::MicrobatchCoverage,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for c in all {
+            assert!(c.as_str().starts_with("FA"));
+            assert!(seen.insert(c.as_str()), "code {c} reused");
+        }
+        assert_eq!(seen.len(), 17);
+    }
+
+    #[test]
+    fn report_counts_and_rendering() {
+        let mut r = Report::new();
+        assert!(r.is_clean());
+        assert!(r.render().contains("clean"));
+        r.push(Code::UnreachableNode, Span::Node(3), "dead".into());
+        assert!(!r.has_errors(), "dead code is only a warning");
+        r.push(Code::WaveOrdering, Span::Wave(1), "race".into());
+        assert!(r.has_errors());
+        assert_eq!(r.error_count(), 1);
+        assert_eq!(r.warning_count(), 1);
+        assert_eq!(r.error_codes(), vec![Code::WaveOrdering]);
+        let text = r.render();
+        assert!(text.contains("FA006 warning at node 3: dead"));
+        assert!(text.contains("FA102 error at wave 1: race"));
+        assert!(text.contains("1 error(s), 1 warning(s)"));
+    }
+}

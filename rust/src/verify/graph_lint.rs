@@ -1,0 +1,330 @@
+//! DAG linter: structural and semantic well-formedness of a [`Graph`].
+//!
+//! Checks (stable codes, see [`crate::verify::diag::Code`]):
+//! - FA001 duplicate node names
+//! - FA002 fan-in arity per [`OpKind`]
+//! - FA003 i32 tensors feeding f32-only operators
+//! - FA004 declared shape/dtype vs re-inference through [`infer_shape`]
+//! - FA005 dangling inputs / non-dense ids
+//! - FA006 nodes that cannot influence any loss/sink (warning)
+//! - FA007 stage-partition invariants from [`ChainPartitionPass`] kwargs
+//!
+//! Runs on arbitrary (possibly hand-broken or deserialized) node lists, so
+//! every check guards its own preconditions: a node that fails FA005 is
+//! excluded from FA002/FA003/FA004 instead of cascading or panicking.
+
+use crate::dag::ir::{infer_shape, DType, Graph, GraphError, OpKind, Shape};
+use crate::dag::{GraphPass, NodeId, OpCategory};
+use crate::decompose::SUBGRAPH_KEY;
+
+use super::diag::{Code, Report, Span};
+
+/// Exact fan-in for fixed-arity operators; `None` for variadic ones
+/// (`Concat` ≥1, `StageCall` 0..n — pipeline builders append label edges via
+/// `Graph::add_arg`).
+fn expected_arity(kind: &OpKind) -> Option<usize> {
+    use OpKind::*;
+    match kind {
+        Placeholder | Variable => Some(0),
+        Conv2d { .. } | Linear { .. } | Embedding { .. } | LayerNorm { .. }
+        | Attention { .. } | FeedForward { .. } | Relu | Gelu | Softmax
+        | MaxPool2d { .. } => Some(1),
+        Add | Multiply | CrossEntropy { .. } | MseLoss => Some(2),
+        Concat { .. } | StageCall { .. } => None,
+    }
+}
+
+/// Operators whose contract admits an i32 input. Everything else computes in
+/// f32 and would reinterpret integer payloads.
+fn accepts_i32(kind: &OpKind) -> bool {
+    matches!(kind, OpKind::Embedding { .. } | OpKind::CrossEntropy { .. } | OpKind::StageCall { .. })
+}
+
+/// Lint `g` and return every finding. Never panics, never mutates.
+pub fn lint_graph(g: &Graph) -> Report {
+    let mut report = Report::new();
+    let n = g.len();
+
+    // FA001 — duplicate names.
+    let mut names = std::collections::BTreeMap::new();
+    for node in &g.nodes {
+        if let Some(&first) = names.get(node.name.as_str()) {
+            report.push(
+                Code::DuplicateName,
+                Span::Node(node.id.min(n.saturating_sub(1))),
+                format!("name '{}' already used by node {first}", node.name),
+            );
+        } else {
+            names.insert(node.name.as_str(), node.id);
+        }
+    }
+
+    // FA005 — dense ids and in-bounds args. Nodes failing this are skipped
+    // by the value-level checks below.
+    let mut structurally_ok = vec![true; n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        if node.id != i {
+            report.push(
+                Code::DanglingInput,
+                Span::Node(i),
+                format!("node '{}' carries id {} at index {i} (ids must be dense)", node.name, node.id),
+            );
+            structurally_ok[i] = false;
+        }
+        for &a in &node.args {
+            if a >= n {
+                report.push(
+                    Code::DanglingInput,
+                    Span::Node(i),
+                    format!("node '{}' reads nonexistent node {a} (graph has {n} nodes)", node.name),
+                );
+                structurally_ok[i] = false;
+            }
+        }
+    }
+
+    // FA002 — arity. Gates FA003/FA004 for the same node so one broken
+    // fan-in yields one root-cause code, not a cascade.
+    let mut arity_ok = vec![true; n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !structurally_ok[i] {
+            continue;
+        }
+        match expected_arity(&node.kind) {
+            Some(want) if node.args.len() != want => {
+                report.push(
+                    Code::ArityMismatch,
+                    Span::Node(i),
+                    format!(
+                        "{} '{}' takes {want} input(s), got {}",
+                        node.kind.name(),
+                        node.name,
+                        node.args.len()
+                    ),
+                );
+                arity_ok[i] = false;
+            }
+            None if matches!(node.kind, OpKind::Concat { .. }) && node.args.is_empty() => {
+                report.push(
+                    Code::ArityMismatch,
+                    Span::Node(i),
+                    format!("Concat '{}' needs at least one input", node.name),
+                );
+                arity_ok[i] = false;
+            }
+            _ => {}
+        }
+    }
+
+    // FA003 — i32 flowing into f32-only operators.
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !structurally_ok[i] || !arity_ok[i] || accepts_i32(&node.kind) {
+            continue;
+        }
+        for &a in &node.args {
+            if g.nodes[a].out_dtype == DType::I32 {
+                report.push(
+                    Code::DtypeViolation,
+                    Span::Edge { from: a, to: i },
+                    format!(
+                        "i32 output of '{}' feeds {} '{}' which computes in f32",
+                        g.nodes[a].name,
+                        node.kind.name(),
+                        node.name
+                    ),
+                );
+            }
+        }
+    }
+
+    // FA004 — declared shape/dtype must agree with re-inference. Leaves keep
+    // their declared shapes and StageCall shapes are owned by the artifact
+    // (same exemptions as the ShapeInference pass).
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !structurally_ok[i] || !arity_ok[i] {
+            continue;
+        }
+        match node.kind {
+            OpKind::Placeholder | OpKind::Variable | OpKind::StageCall { .. } => continue,
+            _ => {}
+        }
+        let args: Vec<(&Shape, DType)> =
+            node.args.iter().map(|&a| (&g.nodes[a].out_shape, g.nodes[a].out_dtype)).collect();
+        match infer_shape(&node.name, &node.kind, &args) {
+            Err(e) => report.push(
+                Code::ShapeIncoherent,
+                Span::Node(i),
+                format!("shape inference failed: {e}"),
+            ),
+            Ok((shape, dtype)) => {
+                if shape != node.out_shape || dtype != node.out_dtype {
+                    report.push(
+                        Code::ShapeIncoherent,
+                        Span::Node(i),
+                        format!(
+                            "'{}' declares {}:{} but inference gives {}:{}",
+                            node.name, node.out_shape, node.out_dtype, shape, dtype
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // FA006 — reachability (warning). Roots are the losses when the graph
+    // has any (training), else every sink (inference). Walk upward through
+    // `args` — never the cached reverse adjacency, which hand-edited graphs
+    // can leave stale.
+    let losses: Vec<NodeId> =
+        g.nodes.iter().filter(|nd| nd.kind.category() == OpCategory::Loss).map(|nd| nd.id).collect();
+    let roots: Vec<NodeId> = if losses.is_empty() {
+        let mut consumed = vec![false; n];
+        for node in &g.nodes {
+            for &a in &node.args {
+                if a < n {
+                    consumed[a] = true;
+                }
+            }
+        }
+        (0..n).filter(|&i| !consumed[i]).collect()
+    } else {
+        losses
+    };
+    let mut reached = vec![false; n];
+    let mut stack: Vec<usize> = roots.into_iter().filter(|&r| r < n).collect();
+    while let Some(id) = stack.pop() {
+        if std::mem::replace(&mut reached[id], true) {
+            continue;
+        }
+        stack.extend(g.nodes[id].args.iter().copied().filter(|&a| a < n));
+    }
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !reached[i] {
+            report.push(
+                Code::UnreachableNode,
+                Span::Node(i),
+                format!("'{}' cannot influence any loss/sink (dead code)", node.name),
+            );
+        }
+    }
+
+    // FA007 — stage-partition invariants, only once a partition exists
+    // (ChainPartitionPass annotates *every* node). Segment indices must
+    // parse, cover every node, and never decrease along a data edge — a
+    // backward cross-stage edge would make the pipeline acyclic claim false.
+    if g.nodes.iter().any(|nd| nd.kwargs.contains_key(SUBGRAPH_KEY)) {
+        let mut seg: Vec<Option<usize>> = vec![None; n];
+        for (i, node) in g.nodes.iter().enumerate() {
+            match node.kwargs.get(SUBGRAPH_KEY) {
+                None => report.push(
+                    Code::StagePartition,
+                    Span::Node(i),
+                    format!(
+                        "graph is partitioned but '{}' has no '{SUBGRAPH_KEY}' kwarg",
+                        node.name
+                    ),
+                ),
+                Some(raw) => match raw.parse::<usize>() {
+                    Ok(s) => seg[i] = Some(s),
+                    Err(_) => report.push(
+                        Code::StagePartition,
+                        Span::Node(i),
+                        format!("'{}' has unparsable '{SUBGRAPH_KEY}' kwarg '{raw}'", node.name),
+                    ),
+                },
+            }
+        }
+        for (i, node) in g.nodes.iter().enumerate() {
+            if !structurally_ok[i] {
+                continue;
+            }
+            for &a in &node.args {
+                if let (Some(sa), Some(si)) = (seg[a], seg[i]) {
+                    if sa > si {
+                        report.push(
+                            Code::StagePartition,
+                            Span::Edge { from: a, to: i },
+                            format!(
+                                "edge from '{}' (segment {sa}) back into '{}' (segment {si}) crosses stages backward",
+                                g.nodes[a].name, node.name
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    report
+}
+
+/// [`GraphPass`] wrapper so the linter slots into
+/// `PassManager::validation()`. Errors fail the pipeline with the rendered
+/// report; warnings (FA006 dead code) pass — `DeadNodeElimination` handles
+/// those, and validation-only pipelines must accept graphs that still carry
+/// dead branches.
+pub struct GraphLintPass;
+
+impl GraphPass for GraphLintPass {
+    fn name(&self) -> &'static str {
+        "graph-lint"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<bool, GraphError> {
+        let report = lint_graph(g);
+        if report.has_errors() {
+            return Err(GraphError::Invalid(format!("lint failed\n{}", report.render())));
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::dag::ir::{DType, Graph, OpKind, Shape};
+
+    fn mlp() -> Graph {
+        let mut g = Graph::new();
+        let x = g.placeholder("x", Shape::of(&[4, 8]), DType::F32);
+        let y = g.placeholder("y", Shape::of(&[4, 2]), DType::F32);
+        let h = g
+            .op("fc1", OpKind::Linear { in_features: 8, out_features: 16, bias: true }, &[x])
+            .unwrap();
+        let r = g.op("relu", OpKind::Relu, &[h]).unwrap();
+        let o = g
+            .op("fc2", OpKind::Linear { in_features: 16, out_features: 2, bias: true }, &[r])
+            .unwrap();
+        g.op("loss", OpKind::MseLoss, &[o, y]).unwrap();
+        g
+    }
+
+    #[test]
+    fn clean_graph_is_clean() {
+        let report = lint_graph(&mlp());
+        assert!(report.is_clean(), "{}", report.render());
+    }
+
+    #[test]
+    fn lint_pass_accepts_clean_and_rejects_broken() {
+        let mut g = mlp();
+        assert!(GraphLintPass.run(&mut g).is_ok());
+        let relu = g.by_name("relu").unwrap().id;
+        g.nodes[relu].args.push(relu); // arity break (self-edge too)
+        let err = GraphLintPass.run(&mut g).unwrap_err();
+        assert!(err.to_string().contains("FA002"), "{err}");
+    }
+
+    #[test]
+    fn fa006_is_warning_only() {
+        let mut g = mlp();
+        let x = g.by_name("x").unwrap().id;
+        g.op("dead", OpKind::Gelu, &[x]).unwrap();
+        let report = lint_graph(&g);
+        assert!(report.has(Code::UnreachableNode));
+        assert!(!report.has_errors(), "{}", report.render());
+        // Validation pipelines therefore still pass.
+        assert!(GraphLintPass.run(&mut g).is_ok());
+    }
+}

@@ -1,0 +1,59 @@
+//! Self-hosted static verifier.
+//!
+//! Three analyzers over the system's three planes, united by one
+//! diagnostics framework ([`diag`]):
+//!
+//! * [`graph_lint`] — is the DAG IR well-formed? (dtype/shape coherence,
+//!   arity, dangling inputs, reachability, stage-partition invariants)
+//! * [`plan_check`] — is a compiled [`crate::exec::ExecPlan`] safe?
+//!   (waves partition the order topologically ⇒ the thread fan-out is
+//!   race-free; a symbolic replay of both sweeps proves the liveness
+//!   refcounts never free a tensor someone still reads)
+//! * [`schedule_check`] — is a [`crate::pipeline::MicrobatchSchedule`]
+//!   legal? (coverage, acyclic deps, per-stage order admits progress)
+//!
+//! Wiring: `PassManager::validation()` runs the linter, `ExecPlan::compile`
+//! verifies its own output and `MicrobatchSchedule::gpipe` checks its
+//! schedule whenever [`verify_enabled`] — always in debug builds, opt-in
+//! for release via `FUSIONAI_VERIFY=1` (the golden/bitwise CI suites run
+//! with it on). The `lint` CLI subcommand exposes the same analyzers over
+//! graph JSON files and exits non-zero on any error diagnostic.
+
+#![deny(clippy::unwrap_used)]
+
+pub mod diag;
+pub mod graph_lint;
+pub mod plan_check;
+pub mod schedule_check;
+
+pub use diag::{Code, Diagnostic, Report, Severity, Span};
+pub use graph_lint::{lint_graph, GraphLintPass};
+pub use plan_check::check_plan;
+pub use schedule_check::{check_schedule, check_schedule_with_deps};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = unresolved, 1 = off, 2 = on.
+static VERIFY: AtomicUsize = AtomicUsize::new(0);
+
+/// Force the always-on verification gate (overrides `FUSIONAI_VERIFY`).
+pub fn set_verify(on: bool) {
+    VERIFY.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Whether the in-line verification hooks run: always in debug builds,
+/// otherwise when `FUSIONAI_VERIFY=1` (resolved once, cached).
+pub fn verify_enabled() -> bool {
+    if cfg!(debug_assertions) {
+        return true;
+    }
+    match VERIFY.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let on = std::env::var("FUSIONAI_VERIFY").map(|v| v == "1").unwrap_or(false);
+            VERIFY.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}

@@ -1,0 +1,552 @@
+//! ExecPlan verifier: proves a compiled plan is safe to execute.
+//!
+//! Given a [`Graph`], its global [`BackwardPlan`] and an [`ExecPlan`], this
+//! establishes (stable codes, see [`crate::verify::diag::Code`]):
+//!
+//! - FA101 forward waves are a partition of `order` over exactly the in-set
+//!   nodes (no drops, no duplicates, no strays);
+//! - FA102 topological legality: every in-set input sits in a strictly
+//!   earlier wave — two nodes of one wave therefore never share an edge, so
+//!   the `WaveRunner` thread fan-out is race-free by construction;
+//! - FA107 the backward order/waves/positions agree with the global
+//!   backward plan and respect gradient-flow dependencies;
+//! - FA106 keep-set closure: stashes, losses, sinks and activations
+//!   messaged to other compnodes survive as long as their readers need;
+//! - FA105 a symbolic replay of the forward and backward sweeps, mirroring
+//!   the runtime's refcount bookkeeping exactly, never reads a freed tensor
+//!   and never underflows a refcount;
+//! - FA103/FA104 `fwd_uses`/`stash_uses` equal the consumer counts
+//!   recomputed from scratch.
+//!
+//! Checks are staged root-cause-first: structural breaks (FA101/FA102/FA107)
+//! suppress the downstream phases, keep-set breaks suppress the replay, and
+//! the replay suppresses the recounts — a single corrupted field reports its
+//! own code instead of a cascade. The replay uses signed counters where the
+//! runtime uses `u32`, so an underflow is a diagnostic, not a wrap.
+
+use crate::dag::autodiff::BackwardPlan;
+use crate::dag::{Graph, NodeId, OpCategory};
+use crate::exec::ExecPlan;
+
+use super::diag::{Code, Report, Span};
+
+/// Verify `plan` against the graph and global backward plan it was compiled
+/// from. Pure and panic-free on arbitrary (possibly corrupted) plans.
+pub fn check_plan(g: &Graph, bwd: &BackwardPlan, plan: &ExecPlan) -> Report {
+    let mut report = Report::new();
+    let n = g.len();
+
+    // ---- Phase 0: field lengths and id bounds. Anything indexed below
+    // must be safe to index, so a violation here aborts immediately.
+    let lengths = [
+        ("mine", plan.mine.len()),
+        ("fwd_uses", plan.fwd_uses.len()),
+        ("keep_after_fp", plan.keep_after_fp.len()),
+        ("keep_always", plan.keep_always.len()),
+        ("stash_uses", plan.stash_uses.len()),
+        ("bwd_pos", plan.bwd_pos.len()),
+    ];
+    for (field, len) in lengths {
+        if len != n {
+            report.push(
+                Code::WavePartition,
+                Span::Global,
+                format!("{field} has {len} entries for a {n}-node graph"),
+            );
+        }
+    }
+    if bwd.tasks.len() != n {
+        report.push(
+            Code::WavePartition,
+            Span::Global,
+            format!("backward plan covers {} nodes, graph has {n}", bwd.tasks.len()),
+        );
+    }
+    for &id in plan.order.iter().chain(plan.waves.iter().flatten()) {
+        if id >= n {
+            report.push(
+                Code::WavePartition,
+                Span::Global,
+                format!("forward plan references nonexistent node {id}"),
+            );
+        }
+    }
+    for &id in plan.bwd_order.iter().chain(plan.bwd_waves.iter().flatten()) {
+        if id >= n {
+            report.push(
+                Code::BwdOrdering,
+                Span::Global,
+                format!("backward plan references nonexistent node {id}"),
+            );
+        }
+    }
+    if report.has_errors() {
+        return report;
+    }
+
+    // ---- Phase A: wave structure.
+
+    // FA101 — `order` holds exactly the in-set nodes, once each, and the
+    // waves are a partition of it.
+    let mut seen_in_order = vec![false; n];
+    for &id in &plan.order {
+        if !plan.mine[id] {
+            report.push(
+                Code::WavePartition,
+                Span::Node(id),
+                format!("'{}' is scheduled but not in the executed set", g.node(id).name),
+            );
+        }
+        if std::mem::replace(&mut seen_in_order[id], true) {
+            report.push(
+                Code::WavePartition,
+                Span::Node(id),
+                format!("'{}' appears twice in the forward order", g.node(id).name),
+            );
+        }
+    }
+    for id in 0..n {
+        if plan.mine[id] && !seen_in_order[id] {
+            report.push(
+                Code::WavePartition,
+                Span::Node(id),
+                format!("in-set node '{}' is missing from the forward order", g.node(id).name),
+            );
+        }
+    }
+    let mut wave_of = vec![usize::MAX; n];
+    for (wi, wave) in plan.waves.iter().enumerate() {
+        for &id in wave {
+            if wave_of[id] != usize::MAX {
+                report.push(
+                    Code::WavePartition,
+                    Span::Wave(wi),
+                    format!("'{}' already sits in wave {}", g.node(id).name, wave_of[id]),
+                );
+            } else if !seen_in_order[id] {
+                report.push(
+                    Code::WavePartition,
+                    Span::Wave(wi),
+                    format!("'{}' is in a wave but not in the forward order", g.node(id).name),
+                );
+            }
+            wave_of[id] = wi;
+        }
+    }
+    for &id in &plan.order {
+        if wave_of[id] == usize::MAX {
+            report.push(
+                Code::WavePartition,
+                Span::Node(id),
+                format!("ordered node '{}' was dropped from every wave", g.node(id).name),
+            );
+        }
+    }
+    if plan.wave_flops.len() != plan.waves.len() {
+        report.push(
+            Code::WavePartition,
+            Span::Global,
+            format!(
+                "wave_flops has {} entries for {} waves",
+                plan.wave_flops.len(),
+                plan.waves.len()
+            ),
+        );
+    }
+
+    // FA102 — topological legality and intra-wave independence. An in-set
+    // arg in the same wave is a read/write race under the thread fan-out.
+    let mut pos_in_order = vec![usize::MAX; n];
+    for (i, &id) in plan.order.iter().enumerate() {
+        pos_in_order[id] = i;
+    }
+    for &id in &plan.order {
+        for &a in &g.node(id).args {
+            if a >= n || !plan.mine[a] {
+                continue;
+            }
+            if pos_in_order[a] == usize::MAX || pos_in_order[a] >= pos_in_order[id] {
+                report.push(
+                    Code::WaveOrdering,
+                    Span::Edge { from: a, to: id },
+                    format!(
+                        "'{}' must be ordered before its consumer '{}'",
+                        g.node(a).name,
+                        g.node(id).name
+                    ),
+                );
+            }
+            if wave_of[a] != usize::MAX && wave_of[id] != usize::MAX && wave_of[a] >= wave_of[id] {
+                report.push(
+                    Code::WaveOrdering,
+                    Span::Wave(wave_of[id]),
+                    format!(
+                        "'{}' and its input '{}' share wave {} (or the input comes later) — \
+                         the wave fan-out would race",
+                        g.node(id).name,
+                        g.node(a).name,
+                        wave_of[id]
+                    ),
+                );
+            }
+        }
+    }
+
+    // FA107 — backward structure against the global plan.
+    let want_bwd: Vec<NodeId> = bwd.order.iter().copied().filter(|&id| plan.mine[id]).collect();
+    if plan.bwd_order != want_bwd {
+        report.push(
+            Code::BwdOrdering,
+            Span::Global,
+            format!(
+                "bwd_order has {} task(s) and disagrees with the global backward plan \
+                 restricted to the set ({} task(s))",
+                plan.bwd_order.len(),
+                want_bwd.len()
+            ),
+        );
+    }
+    let want_pos = bwd.positions();
+    if plan.bwd_pos != want_pos {
+        report.push(
+            Code::BwdOrdering,
+            Span::Global,
+            "bwd_pos disagrees with BackwardPlan::positions() — gradient folds would \
+             accumulate in the wrong order"
+                .to_string(),
+        );
+    }
+    let mut bwave_of = vec![usize::MAX; n];
+    let mut bwd_flat = 0usize;
+    for (wi, wave) in plan.bwd_waves.iter().enumerate() {
+        for &id in wave {
+            bwd_flat += 1;
+            if bwave_of[id] != usize::MAX {
+                report.push(
+                    Code::BwdOrdering,
+                    Span::BwdWave(wi),
+                    format!("task '{}' already sits in bwd wave {}", g.node(id).name, bwave_of[id]),
+                );
+            }
+            bwave_of[id] = wi;
+        }
+    }
+    for &id in &plan.bwd_order {
+        if bwave_of[id] == usize::MAX {
+            report.push(
+                Code::BwdOrdering,
+                Span::Node(id),
+                format!("backward task '{}' was dropped from every bwd wave", g.node(id).name),
+            );
+        }
+        match bwd.task(id) {
+            None => report.push(
+                Code::BwdOrdering,
+                Span::Node(id),
+                format!("'{}' has no task in the global backward plan", g.node(id).name),
+            ),
+            Some(task) => {
+                // Upstream gradients come from the tasks of in-set users:
+                // those must have fired in a strictly earlier bwd wave.
+                for &s in &task.grad_sources {
+                    if s < n
+                        && plan.mine[s]
+                        && bwave_of[id] != usize::MAX
+                        && (bwave_of[s] == usize::MAX || bwave_of[s] >= bwave_of[id])
+                    {
+                        report.push(
+                            Code::BwdOrdering,
+                            Span::BwdWave(bwave_of[id]),
+                            format!(
+                                "task '{}' needs the gradient from '{}' which is not in an \
+                                 earlier bwd wave",
+                                g.node(id).name,
+                                g.node(s).name
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    if bwd_flat != plan.bwd_order.len() {
+        report.push(
+            Code::BwdOrdering,
+            Span::Global,
+            format!("bwd waves hold {} task(s), bwd_order holds {}", bwd_flat, plan.bwd_order.len()),
+        );
+    }
+    if plan.bwd_wave_flops.len() != plan.bwd_waves.len() {
+        report.push(
+            Code::BwdOrdering,
+            Span::Global,
+            format!(
+                "bwd_wave_flops has {} entries for {} bwd waves",
+                plan.bwd_wave_flops.len(),
+                plan.bwd_waves.len()
+            ),
+        );
+    }
+    if report.has_errors() {
+        return report;
+    }
+
+    // ---- Phase B: keep-set closure, then the replay. Structure is sound
+    // here, so every index below is in bounds.
+
+    for id in 0..n {
+        if plan.keep_always[id] && !plan.keep_after_fp[id] {
+            report.push(
+                Code::KeepSetViolation,
+                Span::Node(id),
+                format!("'{}' is keep_always but not keep_after_fp", g.node(id).name),
+            );
+        }
+        if plan.stash_uses[id] > 0 && !plan.keep_after_fp[id] {
+            report.push(
+                Code::KeepSetViolation,
+                Span::Node(id),
+                format!(
+                    "'{}' is re-read by {} backward task(s) but not kept past the forward sweep",
+                    g.node(id).name,
+                    plan.stash_uses[id]
+                ),
+            );
+        }
+        if !plan.mine[id] {
+            continue;
+        }
+        let is_loss = g.node(id).kind.category() == OpCategory::Loss;
+        let is_sink = g.users(id).is_empty();
+        if (is_loss || is_sink) && !plan.keep_always[id] {
+            report.push(
+                Code::KeepSetViolation,
+                Span::Node(id),
+                format!(
+                    "{} '{}' must stay queryable for the whole step (keep_always)",
+                    if is_loss { "loss" } else { "sink" },
+                    g.node(id).name
+                ),
+            );
+        }
+        if g.users(id).iter().any(|&u| !plan.mine[u]) && !plan.keep_after_fp[id] {
+            report.push(
+                Code::KeepSetViolation,
+                Span::Node(id),
+                format!(
+                    "'{}' is messaged to another compnode but freed during the forward sweep",
+                    g.node(id).name
+                ),
+            );
+        }
+    }
+    if report.has_errors() {
+        return report;
+    }
+
+    // Symbolic replay of the forward sweep: per wave, all reads happen
+    // first, then each arg occurrence decrements its refcount and a count
+    // reaching zero frees the buffer unless keep_after_fp — exactly the
+    // runtime's bookkeeping, with i64 counters so underflow is observable.
+    let mut live: Vec<i64> = plan.fwd_uses.iter().map(|&u| i64::from(u)).collect();
+    let mut freed = vec![false; n];
+    for (wi, wave) in plan.waves.iter().enumerate() {
+        for &id in wave {
+            for &a in &g.node(id).args {
+                if freed[a] {
+                    report.push(
+                        Code::UseAfterFree,
+                        Span::Wave(wi),
+                        format!(
+                            "'{}' reads '{}' which was already freed by the forward sweep",
+                            g.node(id).name,
+                            g.node(a).name
+                        ),
+                    );
+                }
+            }
+        }
+        for &id in wave {
+            for &a in &g.node(id).args {
+                live[a] -= 1;
+                if live[a] < 0 {
+                    report.push(
+                        Code::UseAfterFree,
+                        Span::Wave(wi),
+                        format!(
+                            "fwd_uses of '{}' underflows at its read by '{}' — the runtime \
+                             refcount would wrap",
+                            g.node(a).name,
+                            g.node(id).name
+                        ),
+                    );
+                } else if live[a] == 0 && !plan.keep_after_fp[a] {
+                    freed[a] = true;
+                }
+            }
+        }
+    }
+    // Backward sweep: the pre-pass drops every stash no task will read,
+    // then each task re-reads its node's args; keep_always survives.
+    if !plan.bwd_order.is_empty() {
+        let mut stash: Vec<i64> = plan.stash_uses.iter().map(|&u| i64::from(u)).collect();
+        for id in 0..n {
+            if plan.stash_uses[id] == 0 && !plan.keep_always[id] {
+                freed[id] = true;
+            }
+        }
+        for (wi, wave) in plan.bwd_waves.iter().enumerate() {
+            for &id in wave {
+                for &a in &g.node(id).args {
+                    if freed[a] {
+                        report.push(
+                            Code::UseAfterFree,
+                            Span::BwdWave(wi),
+                            format!(
+                                "VJP of '{}' reads stash '{}' after the backward sweep freed it",
+                                g.node(id).name,
+                                g.node(a).name
+                            ),
+                        );
+                    }
+                }
+            }
+            for &id in wave {
+                for &a in &g.node(id).args {
+                    stash[a] -= 1;
+                    if stash[a] < 0 {
+                        report.push(
+                            Code::UseAfterFree,
+                            Span::BwdWave(wi),
+                            format!(
+                                "stash_uses of '{}' underflows at the VJP of '{}'",
+                                g.node(a).name,
+                                g.node(id).name
+                            ),
+                        );
+                    } else if stash[a] == 0 && !plan.keep_always[a] {
+                        freed[a] = true;
+                    }
+                }
+            }
+        }
+        for id in 0..n {
+            if plan.keep_always[id] && freed[id] {
+                report.push(
+                    Code::KeepSetViolation,
+                    Span::Node(id),
+                    format!("keep_always node '{}' did not survive the replay", g.node(id).name),
+                );
+            }
+        }
+    }
+    if report.has_errors() {
+        return report;
+    }
+
+    // ---- Phase C: refcount seeds equal the consumer counts recomputed
+    // from scratch. (Runs last: a replay that is provably clean can still
+    // over-count, which leaks memory rather than corrupting it.)
+    let mut want_fwd = vec![0u32; n];
+    for &id in &plan.order {
+        for &a in &g.node(id).args {
+            want_fwd[a] += 1;
+        }
+    }
+    for id in 0..n {
+        if want_fwd[id] != plan.fwd_uses[id] {
+            report.push(
+                Code::FwdUseCount,
+                Span::Node(id),
+                format!(
+                    "fwd_uses of '{}' is {} but {} in-set consumer(s) read it",
+                    g.node(id).name,
+                    plan.fwd_uses[id],
+                    want_fwd[id]
+                ),
+            );
+        }
+    }
+    let mut want_stash = vec![0u32; n];
+    for &id in &plan.bwd_order {
+        for &a in &g.node(id).args {
+            want_stash[a] += 1;
+        }
+    }
+    for id in 0..n {
+        if want_stash[id] != plan.stash_uses[id] {
+            report.push(
+                Code::StashUseCount,
+                Span::Node(id),
+                format!(
+                    "stash_uses of '{}' is {} but {} backward task(s) read it",
+                    g.node(id).name,
+                    plan.stash_uses[id],
+                    want_stash[id]
+                ),
+            );
+        }
+    }
+
+    report
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::dag::autodiff::backward_plan;
+    use crate::dag::{DType, OpKind, Shape};
+    use crate::models::fig3;
+
+    #[test]
+    fn fig3_full_plan_verifies_clean() {
+        let g = fig3::build();
+        let bwd = backward_plan(&g);
+        let plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+        let report = check_plan(&g, &bwd, &plan);
+        assert!(report.is_clean(), "{}", report.render());
+    }
+
+    #[test]
+    fn fig3_partition_plans_verify_clean() {
+        let g = fig3::build();
+        let bwd = backward_plan(&g);
+        for sub in 1..=3 {
+            let mut in_set = vec![false; g.len()];
+            for (id, s) in fig3::paper_partition(&g) {
+                in_set[id] = s == sub;
+            }
+            let plan = ExecPlan::compile(&g, &in_set, &bwd).unwrap();
+            let report = check_plan(&g, &bwd, &plan);
+            assert!(report.is_clean(), "sub {sub}: {}", report.render());
+        }
+    }
+
+    #[test]
+    fn dropping_a_node_from_its_wave_is_fa101() {
+        let g = fig3::build();
+        let bwd = backward_plan(&g);
+        let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+        plan.waves.last_mut().unwrap().pop();
+        let report = check_plan(&g, &bwd, &plan);
+        assert!(report.has(Code::WavePartition), "{}", report.render());
+    }
+
+    #[test]
+    fn intra_wave_edge_is_fa102() {
+        let mut g = crate::dag::Graph::new();
+        let x = g.placeholder("x", Shape::of(&[2, 4]), DType::F32);
+        let a = g.op("a", OpKind::Relu, &[x]).unwrap();
+        let b = g.op("b", OpKind::Gelu, &[a]).unwrap();
+        let bwd = backward_plan(&g);
+        let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+        // Merge b into a's wave: they share the edge a→b.
+        let wb = plan.waves.iter().position(|w| w.contains(&b)).unwrap();
+        plan.waves[wb].retain(|&id| id != b);
+        let wa = plan.waves.iter().position(|w| w.contains(&a)).unwrap();
+        plan.waves[wa].push(b);
+        let report = check_plan(&g, &bwd, &plan);
+        assert!(report.has(Code::WaveOrdering), "{}", report.render());
+    }
+}

@@ -1,0 +1,360 @@
+//! Adversarial fixtures for the static verifier (§Static analysis).
+//!
+//! One hand-broken graph / plan / schedule per diagnostic code, each
+//! asserting that *exactly* that error code fires — the staged gating in
+//! the analyzers is what keeps a single root cause from cascading. Plus
+//! two properties: random DAGs normalized by `PassManager::standard()`
+//! lint clean, and corrupting any single `fwd_uses` entry of a valid
+//! `ExecPlan` is always caught.
+
+use fusionai::dag::autodiff::backward_plan;
+use fusionai::dag::{DType, Graph, NodeId, OpKind, PassManager, Shape};
+use fusionai::decompose::SUBGRAPH_KEY;
+use fusionai::exec::ExecPlan;
+use fusionai::models::fig3;
+use fusionai::models::transformer::TransformerConfig;
+use fusionai::pipeline::{MicrobatchSchedule, PipeEvent, PipeEventKind};
+use fusionai::proptesting::{check, Gen};
+use fusionai::verify::{
+    check_plan, check_schedule, check_schedule_with_deps, lint_graph, Code, Report,
+};
+
+/// x → fc1 → relu → fc2 → loss(y): one of everything the checkers track.
+fn mlp() -> Graph {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", Shape::of(&[4, 8]), DType::F32);
+    let y = g.placeholder("y", Shape::of(&[4, 2]), DType::F32);
+    let h = g
+        .op("fc1", OpKind::Linear { in_features: 8, out_features: 16, bias: true }, &[x])
+        .unwrap();
+    let r = g.op("relu", OpKind::Relu, &[h]).unwrap();
+    let o = g
+        .op("fc2", OpKind::Linear { in_features: 16, out_features: 2, bias: true }, &[r])
+        .unwrap();
+    g.op("loss", OpKind::MseLoss, &[o, y]).unwrap();
+    g
+}
+
+fn node(g: &Graph, name: &str) -> NodeId {
+    g.by_name(name).unwrap().id
+}
+
+/// The fixture contract: exactly one error code (possibly several findings
+/// carrying it), nothing else at error severity.
+fn assert_exactly(report: &Report, code: Code) {
+    assert_eq!(
+        report.error_codes(),
+        vec![code],
+        "expected exactly {code:?}:\n{}",
+        report.render()
+    );
+}
+
+// ---------------------------------------------------------------- graph lints
+
+#[test]
+fn fa001_duplicate_name() {
+    let mut g = mlp();
+    g.nodes[1].name = "x".to_string(); // y masquerades as x
+    assert_exactly(&lint_graph(&g), Code::DuplicateName);
+}
+
+#[test]
+fn fa002_arity_mismatch() {
+    let mut g = mlp();
+    let relu = node(&g, "relu");
+    let x = node(&g, "x");
+    g.nodes[relu].args.push(x); // unary op with two inputs
+    assert_exactly(&lint_graph(&g), Code::ArityMismatch);
+}
+
+#[test]
+fn fa003_dtype_violation() {
+    let mut g = Graph::new();
+    let t = g.placeholder("tok", Shape::of(&[4, 16]), DType::I32);
+    g.op("r", OpKind::Relu, &[t]).unwrap(); // f32 math over token ids
+    assert_exactly(&lint_graph(&g), Code::DtypeViolation);
+}
+
+#[test]
+fn fa004_shape_incoherent() {
+    let mut g = mlp();
+    let relu = node(&g, "relu");
+    g.set_shape(relu, Shape::of(&[99]), DType::F32); // stale after a "rewrite"
+    assert_exactly(&lint_graph(&g), Code::ShapeIncoherent);
+}
+
+#[test]
+fn fa005_dangling_input() {
+    let mut g = mlp();
+    let relu = node(&g, "relu");
+    g.nodes[relu].args = vec![99]; // reads a node that does not exist
+    assert_exactly(&lint_graph(&g), Code::DanglingInput);
+}
+
+#[test]
+fn fa006_unreachable_node_is_a_warning() {
+    let mut g = mlp();
+    let x = node(&g, "x");
+    g.op("dead", OpKind::Gelu, &[x]).unwrap(); // never reaches the loss
+    let report = lint_graph(&g);
+    assert!(report.has(Code::UnreachableNode), "{}", report.render());
+    assert!(report.error_codes().is_empty(), "dead code must stay a warning");
+}
+
+#[test]
+fn fa007_backward_cross_stage_edge() {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", Shape::of(&[2, 4]), DType::F32);
+    let a = g.op("a", OpKind::Relu, &[x]).unwrap();
+    let b = g.op("b", OpKind::Gelu, &[a]).unwrap();
+    g.set_kwarg(x, SUBGRAPH_KEY, "1");
+    g.set_kwarg(a, SUBGRAPH_KEY, "1");
+    g.set_kwarg(b, SUBGRAPH_KEY, "0"); // downstream node on an earlier stage
+    assert_exactly(&lint_graph(&g), Code::StagePartition);
+}
+
+// ---------------------------------------------------------------- plan checks
+
+#[test]
+fn fa101_node_dropped_from_wave() {
+    let g = mlp();
+    let bwd = backward_plan(&g);
+    let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+    let popped = plan.waves.last_mut().unwrap().pop();
+    assert!(popped.is_some());
+    assert_exactly(&check_plan(&g, &bwd, &plan), Code::WavePartition);
+}
+
+#[test]
+fn fa102_swapped_waves_break_topology() {
+    let g = mlp();
+    let bwd = backward_plan(&g);
+    let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+    // Swap relu's and fc2's waves: fc2 now runs before its input.
+    let relu = node(&g, "relu");
+    let fc2 = node(&g, "fc2");
+    let w_relu = plan.waves.iter().position(|w| w.contains(&relu)).unwrap();
+    let w_fc2 = plan.waves.iter().position(|w| w.contains(&fc2)).unwrap();
+    plan.waves.swap(w_relu, w_fc2);
+    assert_exactly(&check_plan(&g, &bwd, &plan), Code::WaveOrdering);
+}
+
+#[test]
+fn fa103_inflated_fwd_uses() {
+    let g = mlp();
+    let bwd = backward_plan(&g);
+    let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+    plan.fwd_uses[node(&g, "x")] += 1; // over-count: leaks, never frees
+    assert_exactly(&check_plan(&g, &bwd, &plan), Code::FwdUseCount);
+}
+
+#[test]
+fn fa104_inflated_stash_uses() {
+    let g = mlp();
+    let bwd = backward_plan(&g);
+    let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+    let relu = node(&g, "relu");
+    assert!(plan.stash_uses[relu] > 0, "fc2's VJP re-reads relu");
+    plan.stash_uses[relu] += 1;
+    assert_exactly(&check_plan(&g, &bwd, &plan), Code::StashUseCount);
+}
+
+#[test]
+fn fa105_undercounted_refcount_is_use_after_free() {
+    // Inference chain: every link has exactly one consumer.
+    let mut g = Graph::new();
+    let mut prev = g.placeholder("x", Shape::of(&[2, 8]), DType::F32);
+    for i in 0..5 {
+        prev = g.op(&format!("r{i}"), OpKind::Relu, &[prev]).unwrap();
+    }
+    let bwd = backward_plan(&g);
+    let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+    let r1 = node(&g, "r1");
+    plan.fwd_uses[r1] = 0; // the runtime would free (or wrap) under r2's read
+    assert_exactly(&check_plan(&g, &bwd, &plan), Code::UseAfterFree);
+}
+
+#[test]
+fn fa106_loss_evicted_from_keep_set() {
+    let g = mlp();
+    let bwd = backward_plan(&g);
+    let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+    let loss = node(&g, "loss");
+    plan.keep_always[loss] = false;
+    plan.keep_after_fp[loss] = false; // loss must stay queryable all step
+    assert_exactly(&check_plan(&g, &bwd, &plan), Code::KeepSetViolation);
+}
+
+#[test]
+fn fa107_merged_bwd_waves() {
+    let g = mlp();
+    let bwd = backward_plan(&g);
+    let mut plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+    assert!(plan.bwd_waves.len() >= 2);
+    // Merge the last two backward waves: a task lands beside its grad source.
+    let last = plan.bwd_waves.pop().unwrap();
+    plan.bwd_waves.last_mut().unwrap().extend(last);
+    let f = plan.bwd_wave_flops.pop().unwrap();
+    *plan.bwd_wave_flops.last_mut().unwrap() += f;
+    assert_exactly(&check_plan(&g, &bwd, &plan), Code::BwdOrdering);
+}
+
+// ------------------------------------------------------------ schedule checks
+
+#[test]
+fn fa201_cyclic_dependency_relation() {
+    let s = MicrobatchSchedule::gpipe(2, 2);
+    let report = check_schedule_with_deps(&s, |ev| {
+        let mut d = s.deps(ev);
+        // Forward of m0 additionally waits on its own backward: a cycle
+        // with the real Backward → Forward stash dependency.
+        if ev.kind == PipeEventKind::Forward && ev.microbatch == 0 {
+            d.push(PipeEvent { stage: ev.stage, microbatch: 0, kind: PipeEventKind::Backward });
+        }
+        d
+    });
+    assert_exactly(&report, Code::DepsCycle);
+}
+
+#[test]
+fn fa202_reordered_stage_list_deadlocks() {
+    let mut s = MicrobatchSchedule::gpipe(1, 2);
+    let evs = &mut s.per_stage[0];
+    let f = evs.iter().position(|e| e.kind == PipeEventKind::Forward && e.microbatch == 1).unwrap();
+    let b = evs.iter().position(|e| e.kind == PipeEventKind::Backward && e.microbatch == 1).unwrap();
+    evs.swap(f, b); // backward before its own forward: acyclic, yet stuck
+    assert_exactly(&check_schedule(&s), Code::ScheduleDeadlock);
+}
+
+#[test]
+fn fa203_missing_backward_event() {
+    let mut s = MicrobatchSchedule::gpipe(2, 3);
+    s.per_stage[1].retain(|e| !(e.kind == PipeEventKind::Backward && e.microbatch == 1));
+    assert_exactly(&check_schedule(&s), Code::MicrobatchCoverage);
+}
+
+// --------------------------------------------------- valid artifacts verify
+
+#[test]
+fn every_legitimate_artifact_verifies_clean() {
+    // Graphs the system actually builds…
+    for (name, g) in [
+        ("mlp", mlp()),
+        ("fig3", fig3::build()),
+        ("transformer-tiny", TransformerConfig::tiny().build_graph()),
+    ] {
+        let report = lint_graph(&g);
+        assert!(report.is_clean(), "{name}: {}", report.render());
+        // …and every plan compiled from them, full and partitioned.
+        let bwd = backward_plan(&g);
+        let plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+        let report = check_plan(&g, &bwd, &plan);
+        assert!(report.is_clean(), "{name} plan: {}", report.render());
+    }
+    let g = fig3::build();
+    let bwd = backward_plan(&g);
+    for sub in 1..=3 {
+        let mut in_set = vec![false; g.len()];
+        for (id, s) in fig3::paper_partition(&g) {
+            in_set[id] = s == sub;
+        }
+        let plan = ExecPlan::compile(&g, &in_set, &bwd).unwrap();
+        let report = check_plan(&g, &bwd, &plan);
+        assert!(report.is_clean(), "fig3 sub {sub}: {}", report.render());
+    }
+    for (stages, micro) in [(1, 1), (2, 4), (4, 8)] {
+        let s = MicrobatchSchedule::gpipe(stages, micro);
+        let report = check_schedule(&s);
+        assert!(report.is_clean(), "gpipe {stages}×{micro}: {}", report.render());
+    }
+}
+
+// ------------------------------------------------------------------ properties
+
+const B: usize = 8;
+const D: usize = 16;
+
+/// Random shape-preserving DAG ending in `MseLoss(Linear(last), target)` —
+/// the same family the wavefront bitwise tests use.
+fn random_dag(gn: &mut Gen) -> Graph {
+    let mut g = Graph::new();
+    let x = g.placeholder("x", Shape::of(&[B, D]), DType::F32);
+    let mut pool = vec![x];
+    let n_ops = gn.usize(4, 12);
+    for i in 0..n_ops {
+        let a = *gn.choose(&pool);
+        let id = match gn.usize(0, 6) {
+            0 => g.op(&format!("relu{i}"), OpKind::Relu, &[a]).unwrap(),
+            1 => g.op(&format!("gelu{i}"), OpKind::Gelu, &[a]).unwrap(),
+            2 => g.op(&format!("ln{i}"), OpKind::LayerNorm { dim: D }, &[a]).unwrap(),
+            3 => g
+                .op(
+                    &format!("fc{i}"),
+                    OpKind::Linear { in_features: D, out_features: D, bias: true },
+                    &[a],
+                )
+                .unwrap(),
+            4 => {
+                let b = *gn.choose(&pool);
+                g.op(&format!("add{i}"), OpKind::Add, &[a, b]).unwrap()
+            }
+            _ => {
+                let b = *gn.choose(&pool);
+                g.op(&format!("mul{i}"), OpKind::Multiply, &[a, b]).unwrap()
+            }
+        };
+        pool.push(id);
+    }
+    let head = g
+        .op(
+            "head",
+            OpKind::Linear { in_features: D, out_features: D, bias: true },
+            &[*pool.last().unwrap()],
+        )
+        .unwrap();
+    let target = g.placeholder("target", Shape::of(&[B, D]), DType::F32);
+    g.op("loss", OpKind::MseLoss, &[head, target]).unwrap();
+    g
+}
+
+#[test]
+fn prop_random_dags_lint_clean_after_standard_pipeline() {
+    check("lint-clean-after-standard", 40, |gn| {
+        let mut g = random_dag(gn);
+        PassManager::standard().run(&mut g).map_err(|e| e.to_string())?;
+        let report = lint_graph(&g);
+        if report.is_clean() {
+            Ok(())
+        } else {
+            Err(report.render())
+        }
+    });
+}
+
+#[test]
+fn prop_any_single_fwd_uses_mutation_is_caught() {
+    check("fwd-uses-mutation-caught", 15, |gn| {
+        let g = random_dag(gn);
+        let bwd = backward_plan(&g);
+        let plan = ExecPlan::compile_full(&g, &bwd).unwrap();
+        if check_plan(&g, &bwd, &plan).has_errors() {
+            return Err("pristine plan must verify".into());
+        }
+        for id in 0..g.len() {
+            let mut broken = plan.clone();
+            broken.fwd_uses[id] += 1;
+            if !check_plan(&g, &bwd, &broken).has_errors() {
+                return Err(format!("fwd_uses[{id}] += 1 went unnoticed"));
+            }
+            if plan.fwd_uses[id] > 0 {
+                let mut broken = plan.clone();
+                broken.fwd_uses[id] -= 1;
+                if !check_plan(&g, &bwd, &broken).has_errors() {
+                    return Err(format!("fwd_uses[{id}] -= 1 went unnoticed"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
